@@ -1,0 +1,61 @@
+"""Beyond-paper benchmark: time-VARYING bandwidth (the paper holds B constant
+per run).  A WiFi-like square-wave trace alternates 3.5 <-> 0.8 Mbps; the
+online controller must ride through the drops.
+
+derived = mean accuracy.  Rows compare the oracle-B policies against the
+same policy driven by the EWMA BandwidthEstimator (pessimism 0.9) fed only
+by observed uploads — the deployable configuration.
+"""
+from __future__ import annotations
+
+from repro.core import (
+    PAPER_MODELS,
+    PAPER_STREAM,
+    BandwidthEstimator,
+    NetworkState,
+    Trace,
+    make_policy,
+    simulate,
+)
+from repro.core.simulator import Policy
+
+
+def _square_trace(period_s: float = 2.0, hi: float = 3.5, lo: float = 0.8) -> Trace:
+    return Trace(
+        lambda t: (hi if (t // period_s) % 2 == 0 else lo) * 1e6, lambda t: 0.100
+    )
+
+
+def _estimated_policy(name: str) -> Policy:
+    """Wrap a policy so it sees only the estimator's belief, updated from the
+    uploads the previous rounds actually performed."""
+    est = BandwidthEstimator(init_bps=2e6, beta=0.4, pessimism=0.9)
+    inner = make_policy(name)
+
+    def policy(models, stream, net, *, npu_free):
+        plan = inner(models, stream, est.state(), npu_free=npu_free)
+        # feedback: observe the true bandwidth through this round's uploads
+        for d in plan.decisions:
+            if d.is_processed() and d.resolution > 0 and d.where.value == "server":
+                nbytes = stream.frame_bytes(d.resolution)
+                est.observe_upload(nbytes, net.upload_time(nbytes))
+        return plan
+
+    return policy
+
+
+def adaptivity():
+    rows = []
+    trace = _square_trace()
+    n = 240
+    for name in ("max_accuracy", "local", "offload"):
+        st = simulate(make_policy(name), list(PAPER_MODELS), PAPER_STREAM, trace, n)
+        rows.append((f"adapt/oracleB/{name}", st.schedule_time / max(st.schedule_calls, 1) * 1e6,
+                     st.mean_accuracy))
+    st = simulate(_estimated_policy("max_accuracy"), list(PAPER_MODELS), PAPER_STREAM, trace, n)
+    rows.append(("adapt/estimatedB/max_accuracy",
+                 st.schedule_time / max(st.schedule_calls, 1) * 1e6, st.mean_accuracy))
+    return rows
+
+
+ALL = [adaptivity]

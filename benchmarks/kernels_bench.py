@@ -1,0 +1,55 @@
+"""Kernel micro-benchmarks.
+
+On this CPU host the Pallas kernels run in interpret mode, so wall time is
+NOT a TPU performance signal — ``derived`` therefore reports the semantic
+quality metric (quantization relative error / max deviation vs oracle), and
+the TPU-side performance is covered by the roofline benches (which read the
+compiled dry-run artifacts).
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def kernel_npu_matmul():
+    from repro.kernels.npu_matmul import ops, ref
+
+    rows = []
+    rng = np.random.default_rng(0)
+    for m, k, n in [(128, 512, 128), (256, 2048, 256)]:
+        x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+        out = ops.npu_matmul(x, w, interpret=True)
+        t0 = time.perf_counter()
+        out = ops.npu_matmul(x, w, interpret=True)
+        us = (time.perf_counter() - t0) * 1e6
+        exact = x @ w
+        rel = float(jnp.linalg.norm(out - exact) / jnp.linalg.norm(exact))
+        rows.append((f"kernel/npu_matmul_{m}x{k}x{n}", us, rel))
+    return rows
+
+
+def kernel_flash_attention():
+    from repro.kernels.flash_attention import kernel as fk
+    from repro.kernels.flash_attention import ref as fr
+
+    rows = []
+    rng = np.random.default_rng(1)
+    for b, s, h, kh, hd in [(1, 256, 8, 4, 64), (1, 512, 8, 8, 128)]:
+        q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, s, kh, hd)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, s, kh, hd)), jnp.float32)
+        out = fk.flash_attention(q, k, v, causal=True, block_q=128, block_kv=128, interpret=True)
+        t0 = time.perf_counter()
+        out = fk.flash_attention(q, k, v, causal=True, block_q=128, block_kv=128, interpret=True)
+        us = (time.perf_counter() - t0) * 1e6
+        ref = fr.sdpa_ref(q, k, v, causal=True)
+        err = float(jnp.max(jnp.abs(out - ref)))
+        rows.append((f"kernel/flash_attn_b{b}s{s}h{h}", us, err))
+    return rows
+
+
+ALL = [kernel_npu_matmul, kernel_flash_attention]

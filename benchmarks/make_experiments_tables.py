@@ -1,0 +1,68 @@
+"""Render the EXPERIMENTS.md §Dry-run and §Roofline tables from the dry-run
+artifacts.
+
+    PYTHONPATH=src python -m benchmarks.make_experiments_tables [artifacts/dryrun]
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-4:
+        return f"{x*1e6:.1f}us"
+    if x < 0.1:
+        return f"{x*1e3:.2f}ms"
+    return f"{x:.2f}s"
+
+
+def main() -> None:
+    art = Path(sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun")
+    recs = [json.loads(f.read_text()) for f in sorted(art.glob("*.json"))]
+    if not recs:
+        print("no artifacts found — run the dryrun first")
+        return
+
+    print("### §Dry-run — all cells x both meshes (compile + fit proof)\n")
+    print("| arch | shape | mesh | compile s | mem/dev GB (CPU-HLO) | mem/dev GB (flash) | HLO flops (jaxpr) | collective B/dev |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        m = r["memory"]
+        print(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compile_s']} "
+            f"| {m['peak_per_device_gb']} | {m.get('flash_peak_per_device_gb', '-')} "
+            f"| {r['flops_jaxpr']:.3e} | {r['collectives_flash']['total_bytes']:.2e} |"
+        )
+
+    print("\n### §Roofline — single-pod (16x16) baselines, flash-kernel system\n")
+    print("| arch | shape | compute | memory | collective | bottleneck | roofline frac | MODEL/HLO flops |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["mesh"] != "16x16":
+            continue
+        rf = r["roofline"]
+        print(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(rf['compute_s'])} | {fmt_s(rf['memory_s'])} "
+            f"| {fmt_s(rf['collective_s'])} | {rf['bottleneck'].replace('_s','')} "
+            f"| {rf['roofline_fraction']:.3f} | {r['useful_compute_ratio']:.2f} |"
+        )
+
+    print("\n### no-kernel (pure-XLA attention) baseline fractions, 16x16\n")
+    print("| arch | shape | bottleneck | frac (no kernel) | frac (flash) |")
+    print("|---|---|---|---|---|")
+    for r in recs:
+        if r["mesh"] != "16x16":
+            continue
+        rn, rf = r["roofline_no_flash_kernel"], r["roofline"]
+        print(
+            f"| {r['arch']} | {r['shape']} | {rn['bottleneck'].replace('_s','')} "
+            f"| {rn['roofline_fraction']:.3f} | {rf['roofline_fraction']:.3f} |"
+        )
+
+
+if __name__ == "__main__":
+    main()

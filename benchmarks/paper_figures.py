@@ -1,0 +1,173 @@
+"""Benchmarks reproducing each FastVA table/figure with the paper's own
+constants (Table II profiles, 200 ms deadline, 5 resolutions, 100 ms delay).
+
+Each function returns a list of (name, us_per_call, derived) rows where
+``derived`` is the figure's y-value and ``us_per_call`` is the mean wall time
+of one policy round (the schedule-decision cost the paper reports < 1 ms).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import (
+    PAPER_MODELS,
+    PAPER_STREAM,
+    StreamSpec,
+    Trace,
+    brute_force,
+    make_policy,
+    network_mbps,
+    simulate,
+)
+
+N_FRAMES = 120
+POLICIES = ("max_accuracy", "local", "offload", "deepdecision")
+
+
+def _row(name: str, stats, derived: float):
+    us = stats.schedule_time / max(stats.schedule_calls, 1) * 1e6 if stats else 0.0
+    return (name, us, derived)
+
+
+def table2_profiles():
+    """Table II: per-model processing times and accuracy (paper constants
+    drive all scheduling benches; derived = top-1 accuracy)."""
+    rows = []
+    for m in PAPER_MODELS:
+        rows.append((f"table2/{m.name}/npu", m.t_npu * 1e6, m.accuracy(224, where="npu")))
+        rows.append((f"table2/{m.name}/server", m.t_server * 1e6, m.accuracy(224, where="server")))
+    return rows
+
+
+def fig4_accuracy_resolution():
+    rows = []
+    for m in PAPER_MODELS:
+        for r in PAPER_STREAM.resolutions:
+            rows.append((f"fig4/{m.name}/r{r}", 0.0, m.accuracy(r, where="server")))
+    return rows
+
+
+def fig5_bandwidth_accuracy():
+    rows = []
+    for mbps in (0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5):
+        for pol in POLICIES:
+            st = simulate(make_policy(pol), list(PAPER_MODELS), PAPER_STREAM,
+                          Trace.constant(mbps), N_FRAMES)
+            rows.append(_row(f"fig5/B{mbps}/{pol}", st, st.mean_accuracy))
+    return rows
+
+
+def fig6_framerate_accuracy():
+    rows = []
+    for fps in (10, 20, 30, 40, 50):
+        stream = StreamSpec(fps=fps)
+        for pol in POLICIES:
+            st = simulate(make_policy(pol), list(PAPER_MODELS), stream,
+                          Trace.constant(3.0), N_FRAMES)
+            rows.append(_row(f"fig6/fps{fps}/{pol}", st, st.mean_accuracy))
+    return rows
+
+
+def fig7_optimal_gap():
+    """Fig 7b: Optimal minus Max-Accuracy (derived = the gap, ~0)."""
+    rows = []
+    for mbps in (1.0, 2.0, 3.0):
+        for fps in (20, 30, 40):
+            stream = StreamSpec(fps=fps)
+            t0 = time.perf_counter()
+            opt = brute_force.optimal_accuracy(
+                list(PAPER_MODELS), stream, network_mbps(mbps), 40, grid=2e-3
+            )
+            dt = (time.perf_counter() - t0) * 1e6
+            st = simulate(make_policy("max_accuracy"), list(PAPER_MODELS), stream,
+                          Trace.constant(mbps), 40)
+            rows.append((f"fig7/B{mbps}_fps{fps}/gap", dt, max(opt - st.mean_accuracy, 0.0)))
+    return rows
+
+
+def fig8_delay_accuracy():
+    rows = []
+    for rtt_ms in (50, 100, 150, 200):
+        for fps in (30, 50):
+            stream = StreamSpec(fps=fps)
+            for pol in POLICIES:
+                st = simulate(make_policy(pol), list(PAPER_MODELS), stream,
+                              Trace.constant(3.0, rtt_ms=rtt_ms), N_FRAMES)
+                rows.append(_row(f"fig8/d{rtt_ms}_fps{fps}/{pol}", st, st.mean_accuracy))
+    return rows
+
+
+def fig9_bandwidth_utility():
+    rows = []
+    for alpha in (200.0, 50.0):
+        for mbps in (0.5, 1.5, 2.5, 3.5):
+            for pol in ("max_utility", "local", "offload", "deepdecision"):
+                st = simulate(make_policy(pol, alpha=alpha), list(PAPER_MODELS),
+                              PAPER_STREAM, Trace.constant(mbps), N_FRAMES)
+                rows.append(_row(f"fig9/a{alpha:.0f}_B{mbps}/{pol}", st, st.utility(alpha)))
+    return rows
+
+
+def fig10_framerate_utility():
+    rows = []
+    for alpha in (200.0, 50.0):
+        for fps in (10, 30, 50):
+            stream = StreamSpec(fps=fps)
+            for pol in ("max_utility", "local", "offload"):
+                st = simulate(make_policy(pol, alpha=alpha), list(PAPER_MODELS),
+                              stream, Trace.constant(2.5), N_FRAMES)
+                rows.append(_row(f"fig10/a{alpha:.0f}_fps{fps}/{pol}", st, st.utility(alpha)))
+    return rows
+
+
+def fig11_delay_utility():
+    rows = []
+    for alpha in (200.0, 50.0):
+        for rtt_ms in (50, 100, 150):
+            for pol in ("max_utility", "local", "offload"):
+                st = simulate(make_policy(pol, alpha=alpha), list(PAPER_MODELS),
+                              PAPER_STREAM, Trace.constant(2.0, rtt_ms=rtt_ms), N_FRAMES)
+                rows.append(_row(f"fig11/a{alpha:.0f}_d{rtt_ms}/{pol}", st, st.utility(alpha)))
+    return rows
+
+
+def sched_latency():
+    """Paper §VI.A: 'running time ... less than 1 ms'.  Derived = ms/round."""
+    from repro.core.jax_sched import local_accuracy_dp_jax, local_utility_dp_jax
+    from repro.core.max_accuracy import plan_round as ma_round
+    from repro.core.max_utility import plan_round as mu_round
+
+    models = list(PAPER_MODELS)
+    net = network_mbps(2.5)
+    rows = []
+    for name, fn in [
+        ("sched/max_accuracy_py", lambda: ma_round(models, PAPER_STREAM, net)),
+        ("sched/max_utility_py", lambda: mu_round(models, PAPER_STREAM, net, alpha=200.0)),
+        ("sched/accuracy_dp_jax", lambda: local_accuracy_dp_jax(
+            models, n_frames=6, gamma=1 / 30, deadline=0.2, npu_free=0.0, first_arrival=1 / 30)),
+        ("sched/utility_dp_jax", lambda: local_utility_dp_jax(
+            models, n_frames=6, gamma=1 / 30, deadline=0.2, alpha=200.0, npu_free=0.0,
+            first_arrival=1 / 30, window=0.2)),
+    ]:
+        fn()  # warm
+        t0 = time.perf_counter()
+        n = 30
+        for _ in range(n):
+            fn()
+        us = (time.perf_counter() - t0) / n * 1e6
+        rows.append((name, us, us / 1e3))  # derived = ms
+    return rows
+
+
+ALL = [
+    table2_profiles,
+    fig4_accuracy_resolution,
+    fig5_bandwidth_accuracy,
+    fig6_framerate_accuracy,
+    fig7_optimal_gap,
+    fig8_delay_accuracy,
+    fig9_bandwidth_utility,
+    fig10_framerate_utility,
+    fig11_delay_utility,
+    sched_latency,
+]

@@ -1,0 +1,25 @@
+"""Roofline summary bench: reads the dry-run artifacts and emits one row per
+(arch x shape x mesh) cell — ``us_per_call`` = the roofline step-time lower
+bound in microseconds, ``derived`` = the roofline fraction (compute term /
+dominant term; 1.0 means compute-bound at the hardware peak)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def roofline_summary():
+    rows = []
+    if not ARTIFACTS.exists():
+        return [("roofline/NO_ARTIFACTS_run_dryrun_first", 0.0, 0.0)]
+    for f in sorted(ARTIFACTS.glob("*.json")):
+        rec = json.loads(f.read_text())
+        r = rec["roofline"]
+        name = f"roofline/{rec['mesh']}/{rec['arch']}/{rec['shape']}"
+        rows.append((name, r["step_s_lower_bound"] * 1e6, r["roofline_fraction"]))
+    return rows
+
+
+ALL = [roofline_summary]

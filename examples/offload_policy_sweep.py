@@ -1,0 +1,31 @@
+"""Reproduce Fig. 5/9 interactively: sweep bandwidth and compare policies on
+accuracy and utility — the paper's core result in one script.
+
+    PYTHONPATH=src python examples/offload_policy_sweep.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core import PAPER_MODELS, PAPER_STREAM, Trace, make_policy, simulate  # noqa: E402
+
+BANDS = (0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5)
+
+print("Fig.5 (accuracy):  B_Mbps  max_accuracy  local  offload  deepdecision")
+for mbps in BANDS:
+    row = [f"{mbps:18.1f}"]
+    for pol in ("max_accuracy", "local", "offload", "deepdecision"):
+        st = simulate(make_policy(pol), list(PAPER_MODELS), PAPER_STREAM,
+                      Trace.constant(mbps), 120)
+        row.append(f"{st.mean_accuracy:12.3f}")
+    print(" ".join(row))
+
+print("\nFig.9 (utility, alpha=200):")
+for mbps in BANDS:
+    row = [f"{mbps:18.1f}"]
+    for pol in ("max_utility", "local", "offload"):
+        st = simulate(make_policy(pol, alpha=200.0), list(PAPER_MODELS), PAPER_STREAM,
+                      Trace.constant(mbps), 120)
+        row.append(f"{st.utility(200.0):12.1f}")
+    print(" ".join(row))

@@ -1,0 +1,16 @@
+"""End-to-end serving driver (the paper's kind): real JAX classifiers behind
+the FastVA controller — an int8 "NPU" variant and a full-precision "edge"
+variant of ResNet + SqueezeNet, profiled live, scheduling a synthetic video
+under a 200 ms/frame deadline.
+
+    PYTHONPATH=src python examples/serve_video.py --frames 200 --bandwidth 2.0
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.launch import serve  # noqa: E402
+
+if __name__ == "__main__":
+    serve.main()

@@ -1,0 +1,21 @@
+"""Train a reduced-config architecture for a few hundred steps on CPU with
+checkpointing — the same driver a pod run uses.
+
+    PYTHONPATH=src python examples/train_quickstart.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.launch import train  # noqa: E402
+
+if __name__ == "__main__":
+    train.main(
+        [
+            "--arch", "qwen3-0.6b", "--smoke",
+            "--steps", "200", "--batch", "8", "--seq", "64",
+            "--lr", "1e-3", "--ckpt-dir", "/tmp/repro_quickstart_ckpt",
+            "--ckpt-every", "50", "--log-every", "20",
+        ]
+    )

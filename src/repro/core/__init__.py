@@ -1,0 +1,39 @@
+"""FastVA core: the paper's contribution — deadline-constrained scheduling of
+video-analytics requests across a fast/low-precision local path ("NPU") and an
+accurate/network-bound edge path.
+
+Public surface:
+  profiles    ModelProfile / StreamSpec / NetworkState / paper Table II presets
+  max_accuracy.plan_round     — §IV Algorithm 1
+  max_utility.plan_round      — §V Algorithm 2
+  baselines                   — Offload / Local / DeepDecision (§VI.C)
+  brute_force                 — Optimal oracle (exhaustive + grid DP)
+  simulator.simulate          — audited stream replay
+  jax_sched                   — jitted lax implementations of both DPs
+  controller.OnlineController — streaming controller w/ bandwidth estimation
+"""
+from . import (  # noqa: F401
+    baselines,
+    brute_force,
+    controller,
+    jax_sched,
+    max_accuracy,
+    max_utility,
+    profiles,
+    schedule,
+    simulator,
+)
+from .controller import BandwidthEstimator, OnlineController  # noqa: F401
+from .profiles import (  # noqa: F401
+    PAPER_MODELS,
+    PAPER_STREAM,
+    RESNET50,
+    SQUEEZENET,
+    ModelProfile,
+    NetworkState,
+    StreamSpec,
+    network_mbps,
+    profile_ms,
+)
+from .schedule import Decision, RoundPlan, StreamStats, Where  # noqa: F401
+from .simulator import Trace, make_policy, simulate  # noqa: F401

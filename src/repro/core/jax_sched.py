@@ -1,0 +1,263 @@
+"""Jitted (jax.lax) implementations of the two scheduling DPs.
+
+The Python implementations in max_accuracy/max_utility are the reference
+semantics; these run the same recurrences as fixed-shape tensor programs so a
+serving loop can schedule *on device* in microseconds (the paper reports
+< 1 ms on a phone CPU; benchmarks/sched_latency.py measures ours).
+
+  local_accuracy_dp_jax   H(k, t) over a time grid     (scan over frames)
+  local_utility_dp_jax    fixed-width Pareto front DP  (scan over frames)
+
+Both return enough (choice/parent) state to extract the argmax schedule on
+the host; tests assert exact agreement with the Python reference.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .profiles import ModelProfile
+
+NEG = -1e18
+
+
+# ---------------------------------------------------------------------------
+# Max-Accuracy local phase (Eq. 7/8)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("n_frames", "nbins"))
+def _accuracy_dp(
+    dur: jax.Array,  # [J] duration bins (int32, precomputed host-side in f64)
+    acc: jax.Array,  # [J]
+    arr_bins: jax.Array,  # [n_frames] int32
+    dl_bins: jax.Array,  # [n_frames] int32
+    start_bin: jax.Array,  # [] int32
+    *,
+    n_frames: int,
+    nbins: int,
+):
+    J = dur.shape[0]
+    bins = jnp.arange(nbins)
+
+    H0 = jnp.full((nbins,), NEG)
+    H0 = H0.at[jnp.clip(start_bin, 0, nbins - 1)].set(0.0)
+
+    def step(H, k):
+        arr_bin = arr_bins[k]
+        dl_bin = dl_bins[k]
+        # prefix max (and argmax) of H over [0, arr_bin]
+        masked = jnp.where(bins <= arr_bin, H, NEG)
+        pre_val = jnp.max(masked)
+        pre_arg = jnp.argmax(masked).astype(jnp.int32)
+
+        def per_model(j):
+            d = dur[j]
+            a = acc[j]
+            # Case A: NPU free <= arrival, finish at arr_bin + d.
+            fbA = arr_bin + d
+            okA = (fbA <= dl_bin) & (fbA < nbins) & (pre_val > NEG / 2)
+            valA = jnp.where((bins == fbA) & okA, pre_val + a, NEG)
+            parA = jnp.where((bins == fbA) & okA, pre_arg, -1)
+            # Case B: free after arrival; target b takes from source b - d.
+            src = bins - d
+            okB = (src > arr_bin) & (src >= 0) & (bins <= dl_bin)
+            gathered = jnp.where(okB, H[jnp.clip(src, 0, nbins - 1)], NEG)
+            valB = jnp.where(gathered > NEG / 2, gathered + a, NEG)
+            parB = jnp.where(valB > NEG / 2, jnp.clip(src, 0, nbins - 1), -1)
+            val = jnp.where(valA >= valB, valA, valB)
+            par = jnp.where(valA >= valB, parA, parB)
+            return val, par
+
+        vals, pars = jax.vmap(per_model)(jnp.arange(J))  # [J, nbins]
+        best_j = jnp.argmax(vals, axis=0)  # [nbins]
+        Hn = jnp.take_along_axis(vals, best_j[None], axis=0)[0]
+        parent = jnp.take_along_axis(pars, best_j[None], axis=0)[0]
+        choice = jnp.where(Hn > NEG / 2, best_j.astype(jnp.int32), -1)
+        parent = jnp.where(Hn > NEG / 2, parent, -1)
+        return Hn, (choice, parent)
+
+    H, (choices, parents) = jax.lax.scan(step, H0, jnp.arange(n_frames))
+    return H, choices, parents
+
+
+def local_accuracy_dp_jax(
+    models: Sequence[ModelProfile],
+    *,
+    n_frames: int,
+    gamma: float,
+    deadline: float,
+    npu_free: float,
+    first_arrival: float,
+    grid: float = 1e-3,
+):
+    """Mirror of max_accuracy.local_dp; returns (total, model per frame) or
+    (NEG, []) when infeasible."""
+    local = [(j, m) for j, m in enumerate(models) if m.runs_local]
+    if n_frames <= 0:
+        return 0.0, []
+    if not local:
+        return NEG, []
+    acc = jnp.array(
+        [m.acc_npu[max(m.acc_npu)] if m.acc_npu else 0.0 for _, m in local], dtype=jnp.float32
+    )
+    horizon = first_arrival + (n_frames - 1) * gamma + deadline
+    nbins = int(np.ceil(horizon / grid)) + 2
+    # Bin arithmetic in f64 on the host — identical to max_accuracy.local_dp,
+    # so the two implementations agree exactly (no f32 boundary flips).
+    dur = jnp.asarray([int(np.ceil(m.t_npu / grid)) for _, m in local], jnp.int32)
+    arrivals = first_arrival + np.arange(n_frames) * gamma
+    arr_bins = jnp.asarray(np.ceil(arrivals / grid).astype(np.int32))
+    dl_bins = jnp.asarray(np.floor((arrivals + deadline) / grid).astype(np.int32))
+    start_bin = jnp.asarray(int(np.ceil(max(npu_free, 0.0) / grid)), jnp.int32)
+    H, choices, parents = _accuracy_dp(
+        dur, acc, arr_bins, dl_bins, start_bin, n_frames=n_frames, nbins=nbins
+    )
+    H = np.asarray(H)
+    total = float(H.max())
+    if total <= NEG / 2:
+        return NEG, []
+    choices = np.asarray(choices)
+    parents = np.asarray(parents)
+    b = int(H.argmax())
+    out = []
+    for k in range(n_frames - 1, -1, -1):
+        out.append(local[int(choices[k, b])][0])
+        b = int(parents[k, b])
+    out.reverse()
+    return total, out
+
+
+# ---------------------------------------------------------------------------
+# Max-Utility local phase (dominance-pruned triples) — fixed-width front
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("n_frames", "width"))
+def _utility_dp(
+    t_npu: jax.Array,  # [J]
+    acc: jax.Array,  # [J]
+    *,
+    n_frames: int,
+    width: int,
+    gamma: jax.Array,
+    deadline: jax.Array,
+    alpha: jax.Array,
+    npu_free: jax.Array,
+    first_arrival: jax.Array,
+    window: jax.Array,
+):
+    J = t_npu.shape[0]
+    BIG_T = 1e9
+
+    t0 = jnp.full((width,), BIG_T).at[0].set(jnp.maximum(npu_free, 0.0))
+    u0 = jnp.full((width,), NEG).at[0].set(0.0)
+    m0 = jnp.zeros((width,), jnp.int32)
+    valid0 = jnp.zeros((width,), bool).at[0].set(True)
+
+    def step(state, k):
+        t, u, m, valid = state
+        arrival = first_arrival + k * gamma
+        # Candidates: carry-over (slot s, action -1) + process with model j.
+        def proc(j):
+            t2 = jnp.maximum(t, arrival) + t_npu[j]
+            ok = valid & (t2 <= arrival + deadline + 1e-12)
+            mean_term = (m / (m + 1)) * (u - m / window) + alpha * acc[j] / (m + 1)
+            u2 = mean_term + (m + 1) / window
+            return (
+                jnp.where(ok, t2, BIG_T),
+                jnp.where(ok, u2, NEG),
+                jnp.where(ok, m + 1, 0),
+                ok,
+            )
+
+        pt, pu, pm, pok = jax.vmap(proc)(jnp.arange(J))  # [J, width]
+        ct = jnp.concatenate([t, pt.reshape(-1)])
+        cu = jnp.concatenate([u, pu.reshape(-1)])
+        cm = jnp.concatenate([m, pm.reshape(-1)])
+        cok = jnp.concatenate([valid, pok.reshape(-1)])
+        slots = jnp.arange(width)
+        cparent = jnp.concatenate([slots, jnp.tile(slots, J)])
+        caction = jnp.concatenate(
+            [jnp.full((width,), -1, jnp.int32), jnp.repeat(jnp.arange(J, dtype=jnp.int32), width)]
+        )
+        cu = jnp.where(cok, cu, NEG)
+        ct = jnp.where(cok, ct, BIG_T)
+        # Pareto prune: sort by (t asc, u desc); keep strictly-rising u.
+        order = jnp.lexsort((-cu, ct))
+        ct, cu, cm, cok = ct[order], cu[order], cm[order], cok[order]
+        cparent, caction = cparent[order], caction[order]
+        run = jax.lax.associative_scan(jnp.maximum, cu)
+        prev_run = jnp.concatenate([jnp.array([NEG]), run[:-1]])
+        keep = cok & (cu > prev_run + 1e-12)
+        # Compact keepers to the front, truncate to width.  Dropped entries
+        # get an out-of-range target; mode="drop" discards them (clamping to
+        # a valid index would clobber kept slots).
+        rank = jnp.cumsum(keep) - 1
+        tgt = jnp.where(keep, rank, len(ct)).astype(jnp.int32)
+        nt = jnp.full((width,), BIG_T).at[tgt].set(ct, mode="drop")
+        nu = jnp.full((width,), NEG).at[tgt].set(cu, mode="drop")
+        nm = jnp.zeros((width,), jnp.int32).at[tgt].set(cm, mode="drop")
+        nok = jnp.zeros((width,), bool).at[tgt].set(True, mode="drop")
+        nparent = jnp.full((width,), -1, jnp.int32).at[tgt].set(cparent, mode="drop")
+        naction = jnp.full((width,), -1, jnp.int32).at[tgt].set(caction, mode="drop")
+        return (nt, nu, nm, nok), (nparent, naction, nu)
+
+    state, (parents, actions, us) = jax.lax.scan(step, (t0, u0, m0, valid0), jnp.arange(n_frames))
+    return state, parents, actions, us
+
+
+def local_utility_dp_jax(
+    models: Sequence[ModelProfile],
+    *,
+    n_frames: int,
+    gamma: float,
+    deadline: float,
+    alpha: float,
+    npu_free: float,
+    first_arrival: float,
+    window: float,
+    width: int = 64,
+):
+    """Mirror of max_utility.local_utility_dp; returns (utility, [(k, j)])."""
+    if n_frames <= 0:
+        return 0.0, []
+    local = [(j, m) for j, m in enumerate(models) if m.runs_local]
+    if not local:
+        return 0.0, []
+    t_npu = jnp.array([m.t_npu for _, m in local], dtype=jnp.float32)
+    acc = jnp.array(
+        [m.acc_npu[max(m.acc_npu)] if m.acc_npu else 0.0 for _, m in local], dtype=jnp.float32
+    )
+    (t, u, m, valid), parents, actions, us = _utility_dp(
+        t_npu,
+        acc,
+        n_frames=n_frames,
+        width=width,
+        gamma=jnp.float32(gamma),
+        deadline=jnp.float32(deadline),
+        alpha=jnp.float32(alpha),
+        npu_free=jnp.float32(npu_free),
+        first_arrival=jnp.float32(first_arrival),
+        window=jnp.float32(max(window, gamma)),
+    )
+    u = np.asarray(u)
+    best_slot = int(u.argmax())
+    best_u = float(u[best_slot])
+    parents = np.asarray(parents)
+    actions = np.asarray(actions)
+    decisions: list[tuple[int, int]] = []
+    slot = best_slot
+    for k in range(n_frames - 1, -1, -1):
+        a = int(actions[k, slot])
+        if a >= 0:
+            decisions.append((k, local[a][0]))
+        slot = int(parents[k, slot])
+        if slot < 0:
+            break
+    decisions.reverse()
+    return best_u, decisions

@@ -1,0 +1,129 @@
+"""Event-driven stream simulator: executes any policy's round plans over a
+video trace with a (possibly time-varying) network, and audits feasibility.
+
+The simulator is the ground truth for every figure benchmark: policies only
+*propose* plans; accuracy/utility are re-derived here from the profiles, and
+``validate_plan`` rejects any deadline/overlap violation (a violating frame
+counts as missed, accuracy 0 — defence against buggy policies).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Protocol, Sequence
+
+from .profiles import ModelProfile, NetworkState, StreamSpec
+from .schedule import RoundPlan, StreamStats, Where, validate_plan
+
+
+class Policy(Protocol):
+    def __call__(
+        self,
+        models: Sequence[ModelProfile],
+        stream: StreamSpec,
+        net: NetworkState,
+        *,
+        npu_free: float,
+    ) -> RoundPlan: ...
+
+
+@dataclass
+class Trace:
+    """Bandwidth/RTT as functions of time (seconds) — supports live variation."""
+
+    bandwidth_bps: Callable[[float], float]
+    rtt: Callable[[float], float] = lambda t: 0.100
+
+    @staticmethod
+    def constant(mbps: float, rtt_ms: float = 100.0) -> "Trace":
+        return Trace(lambda t: mbps * 1e6, lambda t: rtt_ms / 1e3)
+
+    @staticmethod
+    def piecewise(points: Sequence[tuple[float, float]], rtt_ms: float = 100.0) -> "Trace":
+        """points: [(t_start, mbps), ...] sorted by t_start."""
+        pts = sorted(points)
+
+        def bw(t: float) -> float:
+            cur = pts[0][1]
+            for ts, v in pts:
+                if t >= ts:
+                    cur = v
+                else:
+                    break
+            return cur * 1e6
+
+        return Trace(bw, lambda t: rtt_ms / 1e3)
+
+    def at(self, t: float) -> NetworkState:
+        return NetworkState(bandwidth_bps=self.bandwidth_bps(t), rtt=self.rtt(t))
+
+
+def simulate(
+    policy: Policy,
+    models: Sequence[ModelProfile],
+    stream: StreamSpec,
+    trace: Trace,
+    n_frames: int,
+    *,
+    strict: bool = True,
+) -> StreamStats:
+    """Run ``policy`` over ``n_frames`` frames; return audited stream stats."""
+    stats = StreamStats(frames_total=n_frames, elapsed=n_frames * stream.gamma)
+    gamma = stream.gamma
+    head = 0
+    npu_busy_abs = 0.0
+    while head < n_frames:
+        t0 = head * gamma
+        net = trace.at(t0)
+        wall = time.perf_counter()
+        plan = policy(models, stream, net, npu_free=max(0.0, npu_busy_abs - t0))
+        stats.schedule_time += time.perf_counter() - wall
+        stats.schedule_calls += 1
+
+        horizon = max(plan.horizon, 1)
+        errors = validate_plan(plan, gamma=gamma, deadline=stream.deadline) if strict else []
+        bad_frames = {int(e.split()[1].rstrip(":")) for e in errors} if errors else set()
+
+        for d in plan.decisions:
+            if d.frame >= horizon or head + d.frame >= n_frames:
+                continue
+            if not d.is_processed() or d.frame in bad_frames:
+                continue
+            m = models[d.model]
+            acc = (
+                m.accuracy(d.resolution, where="server")
+                if d.where is Where.SERVER
+                else m.accuracy(stream.r_max, where="npu")
+            )
+            stats.frames_processed += 1
+            stats.accuracy_sum += acc
+        stats.frames_missed_deadline += len(bad_frames)
+        npu_busy_abs = t0 + plan.npu_busy_until
+        head += horizon
+    return stats
+
+
+def make_policy(name: str, *, alpha: float | None = None, **kw) -> Policy:
+    """Factory mapping paper policy names to plan_round callables."""
+    from . import baselines, max_accuracy, max_utility
+
+    if name == "max_accuracy":
+        return lambda m, s, n, *, npu_free: max_accuracy.plan_round(m, s, n, npu_free=npu_free, **kw)
+    if name == "max_utility":
+        assert alpha is not None, "max_utility needs alpha"
+        return lambda m, s, n, *, npu_free: max_utility.plan_round(
+            m, s, n, alpha=alpha, npu_free=npu_free, **kw
+        )
+    if name == "offload":
+        return lambda m, s, n, *, npu_free: baselines.offload_plan_round(
+            m, s, n, npu_free=npu_free, alpha=alpha, **kw
+        )
+    if name == "local":
+        return lambda m, s, n, *, npu_free: baselines.local_plan_round(
+            m, s, n, npu_free=npu_free, alpha=alpha, **kw
+        )
+    if name == "deepdecision":
+        return lambda m, s, n, *, npu_free: baselines.deepdecision_plan_round(
+            m, s, n, npu_free=npu_free, alpha=alpha, **kw
+        )
+    raise ValueError(f"unknown policy {name!r}")

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash attention kernel.
+
+Two references:
+  * ``sdpa_ref`` — naive O(S^2) softmax attention (ground truth).
+  * ``blockwise_ref`` — the online-softmax blockwise algorithm in plain jnp
+    (shared with models.layers.blockwise_sdpa); numerically equivalent.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+from ...models.layers import blockwise_sdpa as blockwise_ref  # noqa: F401
+
+
+def sdpa_ref(q, k, v, *, causal: bool) -> jnp.ndarray:
+    """q: [B,S,H,hd]; k/v: [B,T,KH,hd] (GQA when H > KH)."""
+    B, S, H, hd = q.shape
+    T, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    qg = q.reshape(B, S, KH, G, hd)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) / jnp.sqrt(hd).astype(
+        jnp.float32
+    )
+    if causal:
+        mask = jnp.tril(jnp.ones((S, T), bool), k=T - S)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w.astype(v.dtype), v)
+    return out.reshape(B, S, H, hd)

@@ -1,0 +1,73 @@
+"""Jit'd public wrapper for the NPU int8 matmul.
+
+``npu_matmul(x, w)`` quantizes on the fly (per-row activations, per-channel
+weights) and runs the Pallas kernel; ``npu_matmul_prequant`` takes already
+quantized weights (the serving path: weights are quantized once at load).
+
+On non-TPU backends the kernel runs in interpret mode (the kernel body
+executed by the Pallas interpreter) so CPU tests validate the real kernel
+logic; on TPU it compiles to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def npu_matmul(
+    x: jax.Array, w: jax.Array, *, out_dtype=jnp.float32, interpret: bool | None = None
+) -> jax.Array:
+    """[..., K] x [K, N] -> [..., N] through int8 quantization (both sides)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    xq, xs = ref.quantize_rowwise(x2)
+    wq, ws = ref.quantize_colwise(w)
+    out = npu_matmul_prequant(xq, xs, wq, ws, out_dtype=out_dtype, interpret=interpret)
+    return out.reshape(*lead, w.shape[-1])
+
+
+def npu_matmul_prequant(
+    x_q: jax.Array,
+    x_scale: jax.Array,
+    w_q: jax.Array,
+    w_scale: jax.Array,
+    *,
+    out_dtype=jnp.float32,
+    interpret: bool | None = None,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+) -> jax.Array:
+    if interpret is None:
+        interpret = not _on_tpu()
+    M, K = x_q.shape
+    N = w_q.shape[1]
+    bm = min(block_m, M) if M % min(block_m, M) == 0 else block_m
+    # Pad every dim to its block multiple; slice back after.
+    xq = _pad_to(_pad_to(x_q, block_m, 0), block_k, 1)
+    wq = _pad_to(_pad_to(w_q, block_k, 0), block_n, 1)
+    xs = _pad_to(x_scale, block_m, 0)
+    ws = _pad_to(w_scale, block_n, 0)
+    out = kernel.int8_matmul(
+        xq, wq, xs, ws,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        out_dtype=out_dtype, interpret=interpret,
+    )
+    return out[:M, :N]

@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the NPU int8 matmul (w8a8, per-channel scales).
+
+This is the semantic ground truth the Pallas kernel must match bit-for-bit
+in integer accumulation (int8 x int8 -> int32) followed by f32 rescale.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_rowwise(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-row int8 quantization of activations [M, K].
+    Returns (q [M,K] int8, scale [M] f32)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def quantize_colwise(w: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-output-channel int8 quantization of weights [K, N]."""
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale[None, :]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def int8_matmul_ref(
+    x_q: jnp.ndarray,  # [M, K] int8
+    w_q: jnp.ndarray,  # [K, N] int8
+    x_scale: jnp.ndarray,  # [M] f32
+    w_scale: jnp.ndarray,  # [N] f32
+    out_dtype=jnp.float32,
+) -> jnp.ndarray:
+    acc = jnp.dot(x_q.astype(jnp.int32), w_q.astype(jnp.int32))  # exact int32
+    return (acc.astype(jnp.float32) * x_scale[:, None] * w_scale[None, :]).astype(out_dtype)
+
+
+def npu_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, out_dtype=jnp.float32) -> jnp.ndarray:
+    """End-to-end fake-quant matmul: quantize both sides, int8 GEMM, dequant."""
+    x2 = x.reshape(-1, x.shape[-1])
+    xq, xs = quantize_rowwise(x2)
+    wq, ws = quantize_colwise(w)
+    out = int8_matmul_ref(xq, wq, xs, ws, out_dtype)
+    return out.reshape(*x.shape[:-1], w.shape[-1])

@@ -1,0 +1,373 @@
+"""Roofline analysis from dry-run artifacts.
+
+Three data sources, each used for what it is reliable for:
+
+1. **jaxpr walk** (``jaxpr_costs``) — exact structural FLOPs and a write-once
+   bytes model.  XLA's compiled cost_analysis on the CPU backend counts while
+   (scan) bodies once and loses FLOPs inside fusions, so we count dots/convs
+   ourselves, multiplying scan bodies by their static length and traversing
+   remat bodies as written (recompute counted where it happens).
+
+2. **compiled HLO text** (``collective_bytes``) — per-collective result bytes,
+   multiplied through the while-loop nesting using the ``known_trip_count``
+   backend_config the partitioner attaches.  This is the collective-term
+   source; cost_analysis has no collective view at all.
+
+3. **compiled.memory_analysis()** — per-device bytes (argument/output/temp),
+   the "does it fit" proof.
+
+Roofline terms (TPU v5e targets):
+  compute_s    = flops / chips / PEAK_FLOPS
+  memory_s     = bytes / chips / HBM_BW
+  collective_s = sum over ops of bytes * op_factor / LINK_BW   (per device)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+from typing import Any
+
+import jax
+import numpy as np
+
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+LINK_BW = 50e9  # bytes/s per ICI link (approx, per direction)
+
+_ELEMENTWISE_FREE = {"broadcast_in_dim", "reshape", "transpose", "convert_element_type",
+                     "squeeze", "slice", "concatenate", "pad", "rev", "copy", "bitcast_convert_type"}
+
+
+def _bytes_of(aval) -> int:
+    try:
+        return int(math.prod(aval.shape)) * aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0  # write-once model: eqn outputs + top-level inputs
+
+    def __iadd__(self, o: "Costs"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        return self
+
+    def scaled(self, k: float) -> "Costs":
+        return Costs(self.flops * k, self.bytes * k)
+
+
+def _dot_flops(eqn) -> float:
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    dnums = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dnums
+    batch = math.prod(lhs.shape[i] for i in lb) if lb else 1
+    contract = math.prod(lhs.shape[i] for i in lc) if lc else 1
+    m = math.prod(s for i, s in enumerate(lhs.shape) if i not in set(lc) | set(lb))
+    n = math.prod(s for i, s in enumerate(rhs.shape) if i not in set(rc) | set(rb))
+    return 2.0 * batch * m * n * contract
+
+
+def _conv_flops(eqn) -> float:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval  # kernel
+    groups = eqn.params.get("feature_group_count", 1)
+    kernel_elems = math.prod(rhs.shape)  # includes Cin/g and Cout
+    spatial_out = math.prod(out.shape) / out.shape[-1] if out.ndim else 1
+    # flops = 2 * out_positions * Cout * (Cin/g * prod(k)) = 2*spatial*kernel/g...
+    # kernel_elems = prod(k)*Cin/g*Cout, so per-position MACs = kernel_elems/groups? No:
+    # each output channel uses prod(k)*Cin/g MACs; total = spatial*Cout*prod(k)*Cin/g
+    # = spatial * kernel_elems (since kernel_elems = prod(k)*(Cin/g)*Cout).
+    return 2.0 * spatial_out * kernel_elems
+
+
+def _sub_jaxprs(eqn):
+    """Yield (closed_jaxpr, multiplier) for eqn's nested jaxprs."""
+    p = eqn.params
+    name = eqn.primitive.name
+    if name == "scan":
+        yield p["jaxpr"], float(p["length"])
+        return
+    if name == "while":
+        yield p["body_jaxpr"], 1.0  # trip count unknown at jaxpr level
+        yield p["cond_jaxpr"], 1.0
+        return
+    if name == "cond":
+        branches = p.get("branches", ())
+        if branches:
+            # Upper bound: most expensive branch.
+            costs = [jaxpr_costs(b) for b in branches]
+            best = max(range(len(branches)), key=lambda i: costs[i].flops)
+            yield branches[best], 1.0
+        return
+    for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+        if key in p:
+            j = p[key]
+            yield j, 1.0
+            return
+
+
+def jaxpr_costs(closed) -> Costs:
+    jaxpr = closed.jaxpr if hasattr(closed, "jaxpr") else closed
+    total = Costs()
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        handled = False
+        for sub, mult in _sub_jaxprs(eqn):
+            total += jaxpr_costs(sub).scaled(mult)
+            handled = True
+        if handled and name in ("scan", "while", "cond", "pjit", "remat2", "checkpoint",
+                                "custom_jvp_call", "custom_vjp_call", "closed_call",
+                                "custom_vjp_call_jaxpr"):
+            # carry/output traffic of the loop itself is negligible next to body
+            continue
+        out_bytes = sum(_bytes_of(v.aval) for v in eqn.outvars)
+        if name == "dot_general":
+            total += Costs(_dot_flops(eqn), out_bytes)
+        elif name == "conv_general_dilated":
+            total += Costs(_conv_flops(eqn), out_bytes)
+        elif name in _ELEMENTWISE_FREE:
+            total += Costs(0.0, out_bytes)
+        else:
+            elems = sum(int(math.prod(v.aval.shape)) for v in eqn.outvars if hasattr(v.aval, "shape"))
+            total += Costs(float(elems), out_bytes)
+    return total
+
+
+def traced_costs(fn, *abstract_args) -> Costs:
+    # Fresh wrapper per call: jax caches traces by function identity, which
+    # would defeat context-dependent retraces (flash_accounting).
+    closed = jax.make_jaxpr(lambda *a: fn(*a))(*abstract_args)
+    c = jaxpr_costs(closed)
+    c.bytes += sum(_bytes_of(v.aval) for v in closed.jaxpr.invars)
+    return c
+
+
+def _walk_sites(closed, mult: float, out: dict) -> None:
+    jaxpr = closed.jaxpr if hasattr(closed, "jaxpr") else closed
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        handled = False
+        for sub, m in _sub_jaxprs(eqn):
+            _walk_sites(sub, mult * m, out)
+            handled = True
+        if handled and name in ("scan", "while", "cond", "pjit", "remat2", "checkpoint",
+                                "custom_jvp_call", "custom_vjp_call", "closed_call",
+                                "custom_vjp_call_jaxpr"):
+            continue
+        out_bytes = sum(_bytes_of(v.aval) for v in eqn.outvars) * mult
+        shape = tuple(eqn.outvars[0].aval.shape) if eqn.outvars else ()
+        key = (name, shape)
+        rec = out.setdefault(key, [0.0, 0.0, 0])
+        rec[0] += out_bytes
+        if name == "dot_general":
+            rec[1] += _dot_flops(eqn) * mult
+        elif name == "conv_general_dilated":
+            rec[1] += _conv_flops(eqn) * mult
+        rec[2] += 1
+
+
+def top_cost_sites(fn, *abstract_args, k: int = 15) -> list[dict]:
+    """Attribute the write-once bytes / flops to (primitive, shape) sites —
+    the hillclimb loop's 'profile'."""
+    closed = jax.make_jaxpr(fn)(*abstract_args)
+    sites: dict = {}
+    _walk_sites(closed, 1.0, sites)
+    rows = [
+        {"prim": name, "shape": list(shape), "bytes": b, "flops": f, "count": c}
+        for (name, shape), (b, f, c) in sites.items()
+    ]
+    rows.sort(key=lambda r: -r["bytes"])
+    return rows[:k]
+
+
+def top_collective_sites(hlo_text: str, k: int = 12) -> list[dict]:
+    """Largest collectives (trip-count weighted) from the compiled HLO."""
+    comp_lines, edges = _computations_and_edges(hlo_text)
+    mult = _propagate_multipliers(comp_lines, edges)
+    rows = []
+    for comp, lines in comp_lines.items():
+        w = mult.get(comp, 0.0)
+        if w == 0.0:
+            continue
+        for line in lines:
+            mm = re.search(
+                r"=\s+(\S+)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(?:-start)?\(",
+                line,
+            )
+            if mm:
+                rows.append(
+                    {
+                        "kind": mm.group(2),
+                        "type": mm.group(1)[:48],
+                        "bytes": _shape_bytes(mm.group(1)) * w,
+                        "trips": w,
+                    }
+                )
+    rows.sort(key=lambda r: -r["bytes"])
+    return rows[:k]
+
+
+# ---------------------------------------------------------------------------
+# Compiled-HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+                "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+# Ring-algorithm data volume factors (x result/operand bytes), per device.
+_OP_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+              "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _computations_and_edges(hlo_text: str):
+    """Split HLO text into computations and extract reference edges
+    comp -> (child, multiplier) with while trip counts."""
+    comp_lines: dict[str, list[str]] = defaultdict(list)
+    current = None
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace():
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", line)
+            if m:
+                current = m.group(1)
+        if current is not None:
+            comp_lines[current].append(line)
+
+    edges: dict[str, list[tuple[str, float]]] = defaultdict(list)
+    for comp, lines in comp_lines.items():
+        for line in lines:
+            trip = 1.0
+            mt = re.search(r'known_trip_count":\{"n":"(\d+)"', line)
+            mb = re.search(r"body=%([\w\.\-]+)", line)
+            if mb:
+                if mt:
+                    trip = float(mt.group(1))
+                edges[comp].append((mb.group(1), trip))
+            for mm in re.finditer(r"(?:to_apply|calls)=%([\w\.\-]+)", line):
+                edges[comp].append((mm.group(1), 1.0))
+            mc = re.search(r"branch_computations=\{([^}]*)\}", line)
+            if mc:
+                for name in re.findall(r"%([\w\.\-]+)", mc.group(1)):
+                    edges[comp].append((name, 1.0))
+    return comp_lines, edges
+
+
+def _propagate_multipliers(comp_lines, edges) -> dict[str, float]:
+    mult: dict[str, float] = defaultdict(float)
+    start = next(iter(comp_lines), None)
+    for comp, lines in comp_lines.items():
+        if lines and lines[0].startswith("ENTRY"):
+            start = comp
+    stack = [(start, 1.0)]
+    seen_guard = 0
+    while stack and seen_guard < 100000:
+        seen_guard += 1
+        comp, k = stack.pop()
+        mult[comp] += k
+        for child, w in edges.get(comp, ()):  # conditions excluded (cheap)
+            stack.append((child, k * w))
+    return mult
+
+
+def parse_collectives(hlo_text: str) -> dict[str, Any]:
+    """Sum per-device collective bytes, weighting while-body computations by
+    their known_trip_count.  Returns totals by op kind + estimated seconds."""
+    comp_lines, edges = _computations_and_edges(hlo_text)
+    mult = _propagate_multipliers(comp_lines, edges)
+
+    by_kind: dict[str, float] = defaultdict(float)
+    count = 0
+    for comp, lines in comp_lines.items():
+        k = mult.get(comp, 0.0)
+        if k == 0.0:
+            continue
+        for line in lines:
+            mm = re.search(r"=\s+(\S+)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(?:-start)?\(", line)
+            if not mm:
+                continue
+            nbytes = _shape_bytes(mm.group(1))
+            by_kind[mm.group(2)] += nbytes * k
+            count += 1
+    seconds = sum(_OP_FACTOR[kind] * b / LINK_BW for kind, b in by_kind.items())
+    return {"by_kind": dict(by_kind), "total_bytes": sum(by_kind.values()),
+            "est_seconds": seconds, "op_sites": count}
+
+
+# ---------------------------------------------------------------------------
+# Roofline assembly
+# ---------------------------------------------------------------------------
+
+
+def roofline(flops: float, bytes_: float, collective: dict, chips: int) -> dict[str, Any]:
+    compute_s = flops / chips / PEAK_FLOPS
+    memory_s = bytes_ / chips / HBM_BW
+    collective_s = collective["est_seconds"]  # already per-device
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    return {
+        **terms,
+        "bottleneck": bottleneck,
+        "step_s_lower_bound": step_s,
+        "roofline_fraction": compute_s / step_s if step_s > 0 else 0.0,
+    }
+
+
+def model_flops(kind: str, n_params: int, n_active: int, tokens: float) -> float:
+    """MODEL_FLOPS: 6*N*D train, 2*N*D forward-only."""
+    n = n_active or n_params
+    return (6.0 if "train" in kind else 2.0) * n * tokens
+
+
+# ---------------------------------------------------------------------------
+# Analytic per-device TPU memory model
+# ---------------------------------------------------------------------------
+#
+# compiled.memory_analysis() on the CPU backend inflates bf16 programs: the
+# CPU has no native bf16 GEMM, so XLA hoists whole-weight-stack and KV-cache
+# f32 conversions that a TPU (native bf16 MXU) never materializes.  The
+# analytic model below counts what actually lives in TPU HBM:
+#   train: params f32 + grads f32 + Adam m/v f32 (all sharded like the
+#          params) + bf16 weight copies + remat stash + logits buffers
+#   serve: bf16 params (TP-sharded) + KV cache / activation peak
+# It is reported next to the measured number as memory.analytic_gb.
+
+
+def analytic_memory_gb(arg_bytes: int, out_bytes: int, alias_bytes: int, kind: str,
+                       temp_bytes: int) -> dict:
+    """Conservative TPU estimate from the measured components.
+
+    arguments+outputs are dtype-accurate (they come from our specs, not from
+    CPU lowering); temp is CPU-inflated.  The TPU temp estimate strips the
+    hoisted f32 copies: empirically they account for ~60-70% of CPU temp on
+    bf16-heavy programs, so we bound TPU temp at 40% of CPU temp for serve
+    programs (pure bf16) and 60% for train (mixed f32 master/bf16 compute).
+    Both the raw and adjusted numbers are reported; the adjusted one is the
+    fit-claim, the raw one the hard upper bound.
+    """
+    live_args = arg_bytes + out_bytes - alias_bytes
+    factor = 0.6 if "train" in kind else 0.4
+    return {
+        "upper_bound_gb": round((live_args + temp_bytes) / 1e9, 3),
+        "tpu_estimate_gb": round((live_args + factor * temp_bytes) / 1e9, 3),
+    }

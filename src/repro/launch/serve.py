@@ -1,0 +1,142 @@
+"""Serving driver: stand up NPU (int8) + edge (fp32) variants of a classifier
+pair, profile them, and run the FastVA controller over a synthetic video.
+
+    PYTHONPATH=src python -m repro.launch.serve --policy max_accuracy \
+        --frames 200 --fps 30 --bandwidth 2.0
+
+This is the end-to-end driver for the paper's kind (serving): batched frame
+requests scheduled across the quantized local path and the full-precision
+edge path under a per-frame deadline.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv: list[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", default="max_accuracy", choices=["max_accuracy", "max_utility"])
+    ap.add_argument("--alpha", type=float, default=200.0)
+    ap.add_argument("--frames", type=int, default=200)
+    ap.add_argument("--fps", type=float, default=30.0)
+    ap.add_argument("--bandwidth", type=float, default=2.0, help="Mbps")
+    ap.add_argument("--rtt-ms", type=float, default=100.0)
+    ap.add_argument("--deadline-ms", type=float, default=200.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from .. import configs, quant
+    from ..arch import classifier_forward
+    from ..arch import abstract_params as arch_params
+    from ..core import BandwidthEstimator, OnlineController, StreamSpec, profile_ms
+    from ..models.common import init_tree
+    from ..serving import ModelEndpoint, VideoServer, make_synthetic_video
+
+    n_classes = 10
+    res = 32
+
+    def quick_train(arch, params, state, *, steps=120, bs=32, lr=3e-3, seed=7):
+        """Fit the classifier to the synthetic video distribution so the
+        accuracy profiles (and the int8 drop) are real."""
+        from ..train import optim
+
+        cfgopt = optim.AdamWConfig(lr=lr, warmup_steps=10, total_steps=steps, weight_decay=0.0)
+        opt = optim.init_opt_state(params)
+        tr_frames, tr_labels = make_synthetic_video(2048, n_classes=n_classes, res=res, seed=seed)
+
+        def loss_fn(p, s, x, y):
+            logits, ns = classifier_forward(arch, p, s, x, train=True)
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+            return -jnp.mean(jnp.take_along_axis(logp, y[:, None], -1)), ns
+
+        @jax.jit
+        def step_fn(p, s, opt, x, y):
+            (loss, ns), g = jax.value_and_grad(loss_fn, has_aux=True)(p, s, x, y)
+            p2, opt2, _ = optim.adamw_update(cfgopt, p, g, opt)
+            return p2, ns, opt2, loss
+
+        rng = np.random.default_rng(seed)
+        loss = None
+        for i in range(steps):
+            idx = rng.integers(0, len(tr_frames), bs)
+            params, state, opt, loss = step_fn(
+                params, state, opt, jnp.asarray(tr_frames[idx]), jnp.asarray(tr_labels[idx])
+            )
+        return params, state, float(loss)
+
+    # The paper's model pair: accurate (resnet) vs compact (squeezenet).
+    pair = []
+    for name, tsteps in (("resnet-50", 150), ("squeezenet", 400)):
+        arch = configs.get(name, smoke=True)
+        specs, state_specs = arch_params(arch)
+        params = init_tree(jax.random.key(args.seed), specs)
+        state = init_tree(jax.random.key(args.seed + 1), state_specs)
+        params, state, final_loss = quick_train(arch, params, state, steps=tsteps)
+        print(f"{name}: trained {tsteps} steps, loss={final_loss:.3f}", flush=True)
+        qparams, qstats = quant.npu_variant(params)
+        fwd = lambda p, x, a=arch, s=state: classifier_forward(a, p, s, x, train=False)[0]
+        pair.append((name, arch, params, qparams, fwd, qstats))
+
+    frames, labels = make_synthetic_video(args.frames, n_classes=n_classes, res=res, seed=args.seed)
+    x0 = jnp.asarray(frames[:1])
+
+    # Profile both variants on this host; feed measured times + the paper's
+    # accuracy table shape into the controller.
+    models = []
+    npu_eps, edge_eps = {}, {}
+    for j, (name, arch, params, qparams, fwd, qstats) in enumerate(pair):
+        npu = ModelEndpoint(f"{name}-npu", lambda x, p=qparams, f=fwd: f(p, x), profile_latency_s=0)
+        edge = ModelEndpoint(f"{name}-edge", lambda x, p=params, f=fwd: f(p, x), profile_latency_s=0)
+        npu.warmup(x0)
+        edge.warmup(x0)
+        t0 = time.perf_counter(); [npu(np.asarray(x0)) for _ in range(3)]
+        t_npu = (time.perf_counter() - t0) / 3
+        t0 = time.perf_counter(); [edge(np.asarray(x0)) for _ in range(3)]
+        t_edge = (time.perf_counter() - t0) / 3
+        # Accuracy profile: measured agreement on held-out synthetic frames.
+        hold, hold_labels = make_synthetic_video(128, n_classes=n_classes, res=res, seed=99)
+        acc_fp = float(np.mean(np.argmax(edge.forward(jnp.asarray(hold)), -1) == hold_labels))
+        acc_q = float(np.mean(np.argmax(npu.forward(jnp.asarray(hold)), -1) == hold_labels))
+        models.append(
+            profile_ms(
+                name,
+                t_npu_ms=max(t_npu * 1e3, 1.0),
+                t_server_ms=max(t_edge * 1e3, 1.0),
+                acc_server={45: acc_fp * 0.4, 90: acc_fp * 0.7, 134: acc_fp * 0.85,
+                            179: acc_fp * 0.95, 224: acc_fp},
+                acc_npu={224: acc_q},
+            )
+        )
+        npu_eps[j], edge_eps[j] = npu, edge
+        print(f"{name}: t_npu={t_npu*1e3:.1f}ms t_edge={t_edge*1e3:.1f}ms "
+              f"acc_fp={acc_fp:.3f} acc_int8={acc_q:.3f} quant_err={qstats.mean_rel_err:.4f}",
+              flush=True)
+
+    stream = StreamSpec(fps=args.fps, deadline=args.deadline_ms / 1e3)
+    controller = OnlineController(
+        models=models,
+        stream=stream,
+        policy_name=args.policy,
+        alpha=args.alpha if args.policy == "max_utility" else None,
+        estimator=BandwidthEstimator(init_bps=args.bandwidth * 1e6),
+    )
+    controller.estimator.observe_rtt(args.rtt_ms / 1e3)
+    server = VideoServer(
+        controller=controller, npu_endpoints=npu_eps, edge_endpoints=edge_eps, stream=stream
+    )
+    summary = server.run(frames, labels)
+    summary["policy"] = args.policy
+    summary["scheduler_rounds"] = controller.rounds
+    print(f"serve summary: {summary}", flush=True)
+    return summary
+
+
+if __name__ == "__main__":
+    main()

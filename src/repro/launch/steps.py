@@ -1,0 +1,286 @@
+"""Build lowering-ready step programs per (arch x shape) cell.
+
+``build_cell(arch, shape_name, mesh_rules)`` returns a CellProgram with:
+  fn             the step callable (train_step / prefill / decode / ...)
+  abstract_args  ShapeDtypeStructs for .lower() (no allocation)
+  in_shardings   NamedShardings (None entries -> replicated) when rules given
+  donate         arg indices donated (train state / KV cache)
+
+The same builder drives the multi-pod dry-run, the smoke tests (concrete
+small args via init_args) and the benchmarks — one source of truth for what
+"a step" means per family.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .. import arch as A
+from ..models import diffusion, lm
+from ..models.common import ParamSpec, abstract_tree, activation_rules, init_tree
+from ..sharding.rules import MeshRules
+from ..train import optim
+
+
+@dataclasses.dataclass
+class CellProgram:
+    name: str
+    kind: str
+    fn: Callable
+    arg_specs: tuple  # pytrees of ParamSpec
+    donate: tuple[int, ...] = ()
+    rules: MeshRules | None = None
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def abstract_args(self):
+        return tuple(abstract_tree(s) for s in self.arg_specs)
+
+    def shardings(self):
+        if self.rules is None:
+            return None
+        return tuple(self.rules.tree_shardings(s) for s in self.arg_specs)
+
+    def init_args(self, key=None):
+        key = key if key is not None else jax.random.key(0)
+        return tuple(init_tree(jax.random.fold_in(key, i), s) for i, s in enumerate(self.arg_specs))
+
+    def jit(self, fresh: bool = False):
+        kw: dict[str, Any] = {"donate_argnums": self.donate}
+        sh = self.shardings()
+        if sh is not None:
+            kw["in_shardings"] = sh
+        fn = (lambda *a: self.fn(*a)) if fresh else self.fn
+        return jax.jit(fn, **kw)
+
+
+def _cast_specs(specs, dtype):
+    def cast(s: ParamSpec):
+        if jnp.issubdtype(s.dtype, jnp.floating):
+            return ParamSpec(s.shape, s.axes, dtype, s.init, s.scale)
+        return s
+
+    return jax.tree.map(cast, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _shape_cfg(arch: A.Arch, shape: A.ShapeSpec) -> A.Arch:
+    """Per-shape config overrides (long-context KV axis, 384px windows...)."""
+    cfg = arch.cfg
+    if arch.family == "lm" and shape.name.startswith("long_"):
+        cfg = dataclasses.replace(cfg, kv_seq_axis="long_kv_seq")
+    if arch.family == "lm" and shape.kind == "train":
+        cfg = dataclasses.replace(cfg, seq_shard_acts=True)
+    if arch.family == "vit" and shape.img and shape.img != cfg.img_res:
+        cfg = dataclasses.replace(cfg, img_res=shape.img)
+    if arch.family == "swin" and shape.img and shape.img != cfg.img_res:
+        window = 12 if shape.img % (cfg.patch * 12 * 8) == 0 else cfg.window
+        cfg = dataclasses.replace(cfg, img_res=shape.img, window=window)
+    return dataclasses.replace(arch, cfg=cfg)
+
+
+def _with_rules(rules, fn):
+    def wrapped(*args):
+        if rules is None:
+            return fn(*args)
+        with activation_rules(rules):
+            return fn(*args)
+
+    return wrapped
+
+
+def build_cell(
+    arch: A.Arch,
+    shape_name: str,
+    rules: MeshRules | None = None,
+    adamw: optim.AdamWConfig | None = None,
+    accum_steps: int = 1,
+) -> CellProgram:
+    """accum_steps > 1 splits the global batch into microbatches and
+    accumulates grads before one optimizer update — the elastic-restart lever
+    that preserves global-batch semantics when the data axis shrinks
+    (runtime.plan_elastic_remesh's data_parallel_scale)."""
+    shape = arch.shape(shape_name)
+    arch = _shape_cfg(arch, shape)
+    cfg = arch.cfg
+    adamw = adamw or optim.AdamWConfig()
+    param_specs, state_specs = A.abstract_params(arch)
+    in_specs = A.input_specs(arch, shape)
+    name = f"{arch.name}/{shape.name}"
+
+    # ----- training kinds -------------------------------------------------
+    if shape.kind in ("train", "denoise_train", "classify_train"):
+        zeros_like_specs = jax.tree.map(
+            lambda s: ParamSpec(s.shape, s.axes, jnp.float32, "zeros"),
+            param_specs,
+            is_leaf=lambda x: isinstance(x, ParamSpec),
+        )
+        ts_specs = {
+            "params": param_specs,
+            "state": state_specs,
+            "opt": {
+                "m": zeros_like_specs,
+                "v": zeros_like_specs,
+                "step": ParamSpec((), (), jnp.int32, "zeros"),
+            },
+        }
+
+        if shape.kind == "train":
+
+            def loss_fn(params, state, batch):
+                loss, metrics = lm.train_loss(cfg, params, batch["tokens"], batch["labels"])
+                return loss, (metrics, state)
+
+        elif shape.kind == "denoise_train":
+            if arch.family == "dit":
+
+                def loss_fn(params, state, batch):
+                    loss, m = diffusion.dit_train_loss(
+                        cfg, params, batch["x"], batch["t"], batch["y"], batch["noise"]
+                    )
+                    return loss, (m, state)
+
+            else:
+
+                def loss_fn(params, state, batch):
+                    loss, m = diffusion.flux_train_loss(
+                        cfg, params, batch["x"], batch["txt"], batch["vec"], batch["t"], batch["noise"]
+                    )
+                    return loss, (m, state)
+
+        else:  # classify_train
+
+            def loss_fn(params, state, batch):
+                logits, new_state = A.classifier_forward(
+                    arch, params, state, batch["images"], train=True
+                )
+                logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+                gold = jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)
+                loss = -jnp.mean(gold)
+                return loss, ({"ce": loss}, new_state)
+
+        def train_step(ts, batch):
+            if accum_steps == 1:
+                (loss, (metrics, new_state)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    ts["params"], ts["state"], batch
+                )
+            else:
+                # Microbatch over the leading (batch) dim; grads averaged.
+                micro = jax.tree.map(
+                    lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps, *x.shape[1:]),
+                    batch,
+                )
+
+                def acc_body(carry, mb):
+                    g_acc, loss_acc, state = carry
+                    (loss, (metrics, state)), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                        ts["params"], state, mb
+                    )
+                    g_acc = jax.tree.map(lambda a, b: a + b, g_acc, g)
+                    return (g_acc, loss_acc + loss, state), None
+
+                zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), ts["params"])
+                (grads, loss_sum, new_state), _ = jax.lax.scan(
+                    acc_body, (zeros, jnp.zeros((), jnp.float32), ts["state"]), micro
+                )
+                grads = jax.tree.map(lambda g: g / accum_steps, grads)
+                loss = loss_sum / accum_steps
+                metrics = {}
+            new_params, new_opt, om = optim.adamw_update(adamw, ts["params"], grads, ts["opt"])
+            out = {"params": new_params, "state": new_state, "opt": new_opt}
+            return out, {"loss": loss, **metrics, **om}
+
+        return CellProgram(
+            name=name,
+            kind=shape.kind,
+            fn=_with_rules(rules, train_step),
+            arg_specs=(ts_specs, in_specs),
+            donate=(0,),
+            rules=rules,
+            meta={"arch": arch, "shape": shape},
+        )
+
+    # ----- serving kinds ---------------------------------------------------
+    serve_params = _cast_specs(param_specs, jnp.bfloat16)
+    serve_state = _cast_specs(state_specs, jnp.float32)
+
+    if shape.kind == "prefill":
+
+        def prefill_fn(params, batch):
+            return lm.prefill(cfg, params, batch["tokens"])
+
+        return CellProgram(
+            name=name,
+            kind=shape.kind,
+            fn=_with_rules(rules, prefill_fn),
+            arg_specs=(serve_params, in_specs),
+            rules=rules,
+            meta={"arch": arch, "shape": shape},
+        )
+
+    if shape.kind == "decode":
+        cache = lm.cache_specs(cfg, shape.batch, shape.seq)
+        # The cache arrives pre-filled to seq-1; the step appends one token.
+        cache["len"] = ParamSpec((), (), jnp.int32, "zeros")
+
+        def decode_fn(params, cache, batch):
+            return lm.decode_step(cfg, params, batch["token"], cache)
+
+        return CellProgram(
+            name=name,
+            kind=shape.kind,
+            fn=_with_rules(rules, decode_fn),
+            arg_specs=(serve_params, cache, in_specs),
+            donate=(1,),
+            rules=rules,
+            meta={"arch": arch, "shape": shape},
+        )
+
+    if shape.kind == "denoise_step":
+        if arch.family == "dit":
+
+            def step_fn(params, batch):
+                return diffusion.dit_sample_step(
+                    cfg, params, batch["x"], batch["t"], batch["dt"], batch["y"]
+                )
+
+        else:
+
+            def step_fn(params, batch):
+                return diffusion.flux_sample_step(
+                    cfg,
+                    params,
+                    batch["x"],
+                    batch["txt"],
+                    batch["vec"],
+                    batch["t"],
+                    batch["dt"],
+                    batch["guidance"],
+                )
+
+        return CellProgram(
+            name=name,
+            kind=shape.kind,
+            fn=_with_rules(rules, step_fn),
+            arg_specs=(serve_params, in_specs),
+            rules=rules,
+            meta={"arch": arch, "shape": shape},
+        )
+
+    if shape.kind == "classify_serve":
+
+        def serve_fn(params, state, batch):
+            logits, _ = A.classifier_forward(arch, params, state, batch["images"], train=False)
+            return logits
+
+        return CellProgram(
+            name=name,
+            kind=shape.kind,
+            fn=_with_rules(rules, serve_fn),
+            arg_specs=(serve_params, serve_state, in_specs),
+            rules=rules,
+            meta={"arch": arch, "shape": shape},
+        )
+
+    raise ValueError(f"unhandled kind {shape.kind}")

@@ -1,0 +1,139 @@
+"""Model substrate foundations: abstract parameter specs, logical sharding
+axes, and materialization — the contract every model family implements.
+
+A model family provides:
+  abstract_params(cfg) -> dict[str, ParamSpec]      (nested dicts allowed)
+  apply(cfg, params, *inputs) -> outputs            (pure function)
+
+ParamSpec carries the *logical* axis names of each dimension; the sharding
+rules (sharding/rules.py) map logical names -> mesh axes, skipping any axis
+whose size does not divide the mesh extent and never assigning the same mesh
+axis twice within one spec.  That one guard is what lets a single rule table
+cover 11 architectures x 3 shapes x 2 meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Iterable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]  # logical axis name per dim
+    dtype: Any = jnp.float32
+    init: str = "normal"  # normal | zeros | ones | embed | conv | scaled
+    scale: float | None = None  # override fan-in scaling
+
+    def __post_init__(self) -> None:
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def spec(shape: Iterable[int], axes: Iterable[str | None], **kw) -> ParamSpec:
+    return ParamSpec(tuple(int(s) for s in shape), tuple(axes), **kw)
+
+
+def _fan_in(shape: tuple[int, ...], init: str) -> float:
+    if len(shape) == 1:
+        return 1.0
+    if init == "conv":  # HWIO
+        rf = math.prod(shape[:-2]) if len(shape) > 2 else 1
+        return float(rf * shape[-2])
+    if init == "embed":
+        return 1.0
+    return float(shape[-2]) if len(shape) >= 2 else float(shape[0])
+
+
+def init_param(key: jax.Array, s: ParamSpec) -> jax.Array:
+    if s.init == "zeros":
+        return jnp.zeros(s.shape, s.dtype)
+    if s.init == "ones":
+        return jnp.ones(s.shape, s.dtype)
+    scale = s.scale if s.scale is not None else 1.0 / math.sqrt(max(_fan_in(s.shape, s.init), 1.0))
+    return (jax.random.normal(key, s.shape, jnp.float32) * scale).astype(s.dtype)
+
+
+def init_tree(key: jax.Array, specs: Pytree) -> Pytree:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [init_param(k, s) for k, s in zip(keys, leaves)])
+
+
+def abstract_tree(specs: Pytree) -> Pytree:
+    """ShapeDtypeStructs for .lower() without allocating anything."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def param_count(specs: Pytree) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return sum(math.prod(s.shape) for s in leaves)
+
+
+def param_bytes(specs: Pytree) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return sum(math.prod(s.shape) * np.dtype(s.dtype).itemsize for s in leaves)
+
+
+# ---------------------------------------------------------------------------
+# dtype policy (mixed precision)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    output_dtype: Any = jnp.float32
+
+    def cast(self, tree: Pytree) -> Pytree:
+        c = self.compute_dtype
+        return jax.tree.map(lambda x: x.astype(c) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+
+TRAIN_POLICY = Policy()
+SERVE_POLICY = Policy(param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16, output_dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding helper — models call shard(x, "batch", "seq", "embed")
+# and the active MeshRules (set by launch/train/serve) resolves it.  Outside
+# a mesh context it is the identity, so smoke tests never see 512 devices.
+# ---------------------------------------------------------------------------
+
+_ACTIVE_RULES: list[Any] = []
+
+
+class activation_rules:
+    """Context manager installing a MeshRules for shard() calls."""
+
+    def __init__(self, rules: Any):
+        self.rules = rules
+
+    def __enter__(self):
+        _ACTIVE_RULES.append(self.rules)
+        return self.rules
+
+    def __exit__(self, *exc):
+        _ACTIVE_RULES.pop()
+
+
+def shard(x: jax.Array, *axes: str | None) -> jax.Array:
+    if not _ACTIVE_RULES:
+        return x
+    rules = _ACTIVE_RULES[-1]
+    return rules.constrain(x, axes)
+
+
+def current_rules():
+    return _ACTIVE_RULES[-1] if _ACTIVE_RULES else None

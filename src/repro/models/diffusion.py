@@ -1,0 +1,420 @@
+"""Diffusion backbones: DiT (adaLN-Zero) and Flux-style MMDiT (double-stream
+joint attention + single-stream blocks, rectified flow).
+
+Both operate on VAE latents (stub frontend: input_specs provides latents
+directly; the VAE is out of scope, as the assignment's modality-stub rule
+dictates).  One call = ONE denoising step; samplers loop around it.
+
+  dit_forward(cfg, params, x_t, t, y)            -> prediction (noise, 2C ch)
+  flux_forward(cfg, params, img, txt, vec, t, g) -> velocity prediction
+  *_train_loss                                    DDPM eps-MSE / RF v-MSE
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from .common import shard, spec
+from .lm import _stack
+
+
+def timestep_embedding(t: jax.Array, dim: int, max_period: float = 10000.0) -> jax.Array:
+    """t: [B] float in [0, 1] or integer steps -> [B, dim] sinusoidal."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = t.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.cos(ang), jnp.sin(ang)], axis=-1)
+
+
+def sincos_2d(d: int, h: int, w: int) -> np.ndarray:
+    """Fixed 2D sin-cos positional embedding [h*w, d] (DiT uses this)."""
+
+    def one(dim, pos):
+        omega = 1.0 / 10000 ** (np.arange(dim // 2) / (dim // 2))
+        out = pos[:, None] * omega[None, :]
+        return np.concatenate([np.sin(out), np.cos(out)], axis=1)
+
+    gh, gw = np.meshgrid(np.arange(h), np.arange(w), indexing="ij")
+    return np.concatenate([one(d // 2, gh.reshape(-1)), one(d // 2, gw.reshape(-1))], axis=1).astype(
+        np.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# DiT
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DiTConfig:
+    name: str
+    img_res: int = 256  # pixel space; latent = img_res // 8
+    patch: int = 2
+    n_layers: int = 28
+    d_model: int = 1152
+    n_heads: int = 16
+    in_ch: int = 4
+    n_classes: int = 1000
+    mlp_ratio: int = 4
+    remat: bool = False
+
+    @property
+    def latent(self) -> int:
+        return self.img_res // 8
+
+    @property
+    def tokens(self) -> int:
+        return (self.latent // self.patch) ** 2
+
+    def attn_cfg(self) -> L.AttnCfg:
+        return L.AttnCfg(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            n_kv_heads=self.n_heads,
+            head_dim=self.d_model // self.n_heads,
+            causal=False,
+            rope=False,
+            bias=True,
+        )
+
+
+def _dit_block_specs(c: DiTConfig) -> dict:
+    d = c.d_model
+    return {
+        "ln1": L.layernorm_specs(d),
+        "attn": L.attention_specs(c.attn_cfg()),
+        "ln2": L.layernorm_specs(d),
+        "mlp": L.mlp_specs(d, d * c.mlp_ratio),
+        "adaln": {
+            "w": spec((d, 6 * d), ("embed", "mlp"), init="zeros"),
+            "b": spec((6 * d,), ("mlp",), init="zeros"),
+        },
+    }
+
+
+def dit_abstract_params(c: DiTConfig) -> dict:
+    d = c.d_model
+    pdim = c.patch * c.patch * c.in_ch
+    return {
+        "x_embed": {"w": spec((pdim, d), (None, "embed")), "b": spec((d,), ("embed",), init="zeros")},
+        "t_embed": L.mlp_specs(256, d, out_dim=d),
+        "y_embed": spec((c.n_classes + 1, d), (None, "embed"), init="embed", scale=0.02),
+        "blocks": _stack(_dit_block_specs(c), c.n_layers),
+        "final": {
+            "ln": L.layernorm_specs(d),
+            "adaln": {
+                "w": spec((d, 2 * d), ("embed", "mlp"), init="zeros"),
+                "b": spec((2 * d,), ("mlp",), init="zeros"),
+            },
+            "proj": {
+                "w": spec((d, c.patch * c.patch * 2 * c.in_ch), ("embed", None), init="zeros"),
+                "b": spec((c.patch * c.patch * 2 * c.in_ch,), (None,), init="zeros"),
+            },
+        },
+    }
+
+
+def _patchify(x, p):
+    B, H, W, C = x.shape
+    x = x.reshape(B, H // p, p, W // p, p, C).transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(B, (H // p) * (W // p), p * p * C)
+
+
+def _unpatchify(x, p, h, w, c_out):
+    B = x.shape[0]
+    x = x.reshape(B, h, w, p, p, c_out).transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(B, h * p, w * p, c_out)
+
+
+def _dit_block(c: DiTConfig, p, x, cond):
+    mod = cond @ p["adaln"]["w"].astype(cond.dtype) + p["adaln"]["b"].astype(cond.dtype)
+    sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
+    h = L.modulate(L.layernorm(p["ln1"], x), sh1, sc1)
+    a, _ = L.attention(c.attn_cfg(), p["attn"], h)
+    x = shard(x + g1[:, None, :] * a, "batch", None, None)
+    h = L.modulate(L.layernorm(p["ln2"], x), sh2, sc2)
+    f = L.mlp(p["mlp"], h)
+    return shard(x + g2[:, None, :] * f, "batch", None, None)
+
+
+def dit_forward(c: DiTConfig, params, x_t, t, y):
+    """x_t: [B, L, L, C] latent; t: [B]; y: [B] int labels.
+    Returns [B, L, L, 2C] (noise prediction + sigma channels)."""
+    B, H, W, _ = x_t.shape
+    p = c.patch
+    x = _patchify(x_t.astype(jnp.bfloat16), p)
+    x = x @ params["x_embed"]["w"].astype(x.dtype) + params["x_embed"]["b"].astype(x.dtype)
+    pos = jnp.asarray(sincos_2d(c.d_model, H // p, W // p))[None]
+    x = x + pos.astype(x.dtype)
+    x = shard(x, "batch", None, None)
+
+    temb = L.mlp(params["t_embed"], timestep_embedding(t, 256).astype(jnp.bfloat16), act=jax.nn.silu)
+    yemb = params["y_embed"].astype(jnp.bfloat16)[y]
+    cond = jax.nn.silu(temb + yemb)
+
+    def body(x, blk):
+        fn = _dit_block
+        if c.remat:
+            fn = jax.checkpoint(fn, static_argnums=(0,))
+        return fn(c, blk, x, cond), None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+
+    fin = params["final"]
+    mod = cond @ fin["adaln"]["w"].astype(cond.dtype) + fin["adaln"]["b"].astype(cond.dtype)
+    sh, sc = jnp.split(mod, 2, axis=-1)
+    x = L.modulate(L.layernorm(fin["ln"], x), sh, sc)
+    x = x @ fin["proj"]["w"].astype(x.dtype) + fin["proj"]["b"].astype(x.dtype)
+    return _unpatchify(x.astype(jnp.float32), p, H // p, W // p, 2 * c.in_ch)
+
+
+def dit_train_loss(c: DiTConfig, params, x0, t, y, noise):
+    """DDPM eps-prediction MSE at cosine-schedule timestep t in [0,1]."""
+    a = jnp.cos(0.5 * jnp.pi * t).astype(jnp.float32)[:, None, None, None]
+    s = jnp.sin(0.5 * jnp.pi * t).astype(jnp.float32)[:, None, None, None]
+    x_t = a * x0 + s * noise
+    pred = dit_forward(c, params, x_t, t * 1000.0, y)
+    eps = pred[..., : c.in_ch]
+    return jnp.mean((eps - noise) ** 2), {}
+
+
+def dit_sample_step(c: DiTConfig, params, x_t, t, dt, y):
+    """One DDIM-style step from t to t - dt (cosine schedule)."""
+    pred = dit_forward(c, params, x_t, t * 1000.0, y)
+    eps = pred[..., : c.in_ch].astype(jnp.float32)
+    a_t = jnp.cos(0.5 * jnp.pi * t)[:, None, None, None]
+    s_t = jnp.sin(0.5 * jnp.pi * t)[:, None, None, None]
+    x0 = (x_t - s_t * eps) / jnp.maximum(a_t, 1e-4)
+    t2 = jnp.maximum(t - dt, 0.0)
+    a2 = jnp.cos(0.5 * jnp.pi * t2)[:, None, None, None]
+    s2 = jnp.sin(0.5 * jnp.pi * t2)[:, None, None, None]
+    return a2 * x0 + s2 * eps
+
+
+# ---------------------------------------------------------------------------
+# Flux-style MMDiT
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FluxConfig:
+    name: str
+    img_res: int = 1024
+    latent_res: int = 128
+    patch: int = 2
+    n_double: int = 19
+    n_single: int = 38
+    d_model: int = 3072
+    n_heads: int = 24
+    in_ch: int = 16
+    txt_len: int = 256
+    txt_dim: int = 4096
+    vec_dim: int = 768
+    mlp_ratio: int = 4
+    guidance: bool = True
+    remat: bool = True
+
+    @property
+    def tokens(self) -> int:
+        return (self.latent_res // self.patch) ** 2
+
+    def attn_cfg(self) -> L.AttnCfg:
+        return L.AttnCfg(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            n_kv_heads=self.n_heads,
+            head_dim=self.d_model // self.n_heads,
+            causal=False,
+            rope=False,
+            bias=True,
+            qk_norm=True,
+        )
+
+
+def _mod_specs(d: int, n: int) -> dict:
+    return {"w": spec((d, n * d), ("embed", "mlp"), init="zeros"), "b": spec((n * d,), ("mlp",), init="zeros")}
+
+
+def _double_block_specs(c: FluxConfig) -> dict:
+    d = c.d_model
+    stream = lambda: {
+        "mod": _mod_specs(d, 6),
+        "ln1": L.layernorm_specs(d),
+        "attn": L.attention_specs(c.attn_cfg()),
+        "ln2": L.layernorm_specs(d),
+        "mlp": L.mlp_specs(d, d * c.mlp_ratio),
+    }
+    return {"img": stream(), "txt": stream()}
+
+
+def _single_block_specs(c: FluxConfig) -> dict:
+    d = c.d_model
+    h = d * c.mlp_ratio
+    return {
+        "mod": _mod_specs(d, 3),
+        "ln": L.layernorm_specs(d),
+        "attn": L.attention_specs(c.attn_cfg()),
+        "mlp_in": spec((d, h), ("embed", "mlp")),
+        "mlp_out": spec((h, d), ("mlp", "embed")),
+    }
+
+
+def flux_abstract_params(c: FluxConfig) -> dict:
+    d = c.d_model
+    pdim = c.patch * c.patch * c.in_ch
+    return {
+        "img_in": {"w": spec((pdim, d), (None, "embed")), "b": spec((d,), ("embed",), init="zeros")},
+        "txt_in": {"w": spec((c.txt_dim, d), (None, "embed")), "b": spec((d,), ("embed",), init="zeros")},
+        "vec_in": L.mlp_specs(c.vec_dim, d, out_dim=d),
+        "t_embed": L.mlp_specs(256, d, out_dim=d),
+        "g_embed": L.mlp_specs(256, d, out_dim=d),
+        "double": _stack(_double_block_specs(c), c.n_double),
+        "single": _stack(_single_block_specs(c), c.n_single),
+        "final": {
+            "ln": L.layernorm_specs(d),
+            "adaln": _mod_specs(d, 2),
+            "proj": {
+                "w": spec((d, pdim), ("embed", None), init="zeros"),
+                "b": spec((pdim,), (None,), init="zeros"),
+            },
+        },
+    }
+
+
+def _mod(p, vec, n):
+    m = vec @ p["w"].astype(vec.dtype) + p["b"].astype(vec.dtype)
+    return jnp.split(m, n, axis=-1)
+
+
+def _pin_replicated(*ts):
+    """Stop the partitioner from back-propagating the residual's seq-sharding
+    into attention internals (it would re-gather K/V per block otherwise)."""
+    return tuple(shard(t, "batch", None, None, None) for t in ts)
+
+
+def _joint_attention(c: FluxConfig, p_img, p_txt, img, txt):
+    """Compute q/k/v per stream, attend jointly over [txt; img]."""
+    ac = c.attn_cfg()
+    zero = lambda x: jnp.zeros(x.shape[:2], jnp.int32)
+    qi, ki, vi = _pin_replicated(*L._qkv(ac, p_img, img, zero(img)))
+    qt, kt, vt = _pin_replicated(*L._qkv(ac, p_txt, txt, zero(txt)))
+    q = jnp.concatenate([qt, qi], axis=1)
+    k = jnp.concatenate([kt, ki], axis=1)
+    v = jnp.concatenate([vt, vi], axis=1)
+    q, k, v = _pin_replicated(q, k, v)
+    S = q.shape[1]
+    if L._FLASH_ACCOUNTING:
+        out = L._flash_stub(q, k, v)
+    elif S > L.BLOCKWISE_THRESHOLD:
+        out = L.blockwise_sdpa(q, k, v, causal=False)
+    else:
+        out = L._sdpa(ac, q, k, v, None)
+    ot, oi = out[:, : txt.shape[1]], out[:, txt.shape[1] :]
+    yi = jnp.einsum("bshk,hkd->bsd", oi, p_img["wo"].astype(img.dtype)) + p_img["bo"].astype(img.dtype)
+    yt = jnp.einsum("bshk,hkd->bsd", ot, p_txt["wo"].astype(txt.dtype)) + p_txt["bo"].astype(txt.dtype)
+    return yi, yt
+
+
+def _double_block(c: FluxConfig, p, img, txt, vec):
+    mi = _mod(p["img"]["mod"], vec, 6)
+    mt = _mod(p["txt"]["mod"], vec, 6)
+    # Gather the seq-sharded residual ONCE per sublayer (bf16) — the SPMD
+    # partitioner otherwise all-gathers q/k/v separately (§Perf iteration).
+    hi = shard(L.modulate(L.layernorm(p["img"]["ln1"], img), mi[0], mi[1]), "batch", None, None)
+    ht = L.modulate(L.layernorm(p["txt"]["ln1"], txt), mt[0], mt[1])
+    ai, at = _joint_attention(c, p["img"]["attn"], p["txt"]["attn"], hi, ht)
+    img = shard(img + mi[2][:, None] * ai, "batch", "act_seq", None)
+    txt = txt + mt[2][:, None] * at
+    hi2 = shard(L.modulate(L.layernorm(p["img"]["ln2"], img), mi[3], mi[4]), "batch", None, None)
+    fi = L.mlp(p["img"]["mlp"], hi2)
+    ft = L.mlp(p["txt"]["mlp"], L.modulate(L.layernorm(p["txt"]["ln2"], txt), mt[3], mt[4]))
+    img = shard(img + mi[5][:, None] * fi, "batch", "act_seq", None)
+    txt = txt + mt[5][:, None] * ft
+    return img, txt
+
+
+def _single_block(c: FluxConfig, p, x, vec):
+    sh, sc, g = _mod(p["mod"], vec, 3)
+    h = shard(L.modulate(L.layernorm(p["ln"], x), sh, sc), "batch", None, None)
+    ac = c.attn_cfg()
+    q, k, v = L._qkv(ac, p["attn"], h, jnp.zeros(h.shape[:2], jnp.int32))
+    q, k, v = _pin_replicated(q, k, v)
+    if L._FLASH_ACCOUNTING:
+        o = L._flash_stub(q, k, v)
+    elif q.shape[1] > L.BLOCKWISE_THRESHOLD:
+        o = L.blockwise_sdpa(q, k, v, causal=False)
+    else:
+        o = L._sdpa(ac, q, k, v, None)
+    a = jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"].astype(x.dtype)) + p["attn"]["bo"].astype(x.dtype)
+    f = jax.nn.gelu(h @ p["mlp_in"].astype(h.dtype)) @ p["mlp_out"].astype(h.dtype)
+    # attn and MLP share the residual: one fused partial-sum, one reshard.
+    return shard(x + g[:, None] * (a + f), "batch", "act_seq", None)
+
+
+def flux_forward(c: FluxConfig, params, img_lat, txt, vec, t, guidance=None):
+    """img_lat: [B, R, R, C]; txt: [B, T, txt_dim]; vec: [B, vec_dim];
+    t: [B] in [0,1]; guidance: [B] scale.  Returns velocity [B, R, R, C]."""
+    B, H, W, _ = img_lat.shape
+    p = c.patch
+    img = _patchify(img_lat.astype(jnp.bfloat16), p)
+    img = img @ params["img_in"]["w"].astype(img.dtype) + params["img_in"]["b"].astype(img.dtype)
+    pos = jnp.asarray(sincos_2d(c.d_model, H // p, W // p))[None]
+    img = shard(img + pos.astype(img.dtype), "batch", "act_seq", None)
+    txt = txt.astype(jnp.bfloat16) @ params["txt_in"]["w"].astype(jnp.bfloat16) + params["txt_in"][
+        "b"
+    ].astype(jnp.bfloat16)
+
+    cond = L.mlp(params["t_embed"], timestep_embedding(t * 1000.0, 256).astype(jnp.bfloat16), act=jax.nn.silu)
+    cond = cond + L.mlp(params["vec_in"], vec.astype(jnp.bfloat16), act=jax.nn.silu)
+    if c.guidance and guidance is not None:
+        cond = cond + L.mlp(
+            params["g_embed"], timestep_embedding(guidance * 1000.0, 256).astype(jnp.bfloat16), act=jax.nn.silu
+        )
+    cond = jax.nn.silu(cond)
+
+    def dbody(carry, blk):
+        img, txt = carry
+        fn = _double_block
+        if c.remat:
+            fn = jax.checkpoint(fn, static_argnums=(0,))
+        img, txt = fn(c, blk, img, txt, cond)
+        return (img, txt), None
+
+    (img, txt), _ = jax.lax.scan(dbody, (img, txt), params["double"])
+
+    x = jnp.concatenate([txt, img], axis=1)
+
+    def sbody(x, blk):
+        fn = _single_block
+        if c.remat:
+            fn = jax.checkpoint(fn, static_argnums=(0,))
+        return fn(c, blk, x, cond), None
+
+    x, _ = jax.lax.scan(sbody, x, params["single"])
+    img = x[:, c.txt_len :]
+
+    fin = params["final"]
+    sh, sc = _mod(fin["adaln"], cond, 2)
+    img = L.modulate(L.layernorm(fin["ln"], img), sh, sc)
+    img = img @ fin["proj"]["w"].astype(img.dtype) + fin["proj"]["b"].astype(img.dtype)
+    return _unpatchify(img.astype(jnp.float32), p, H // p, W // p, c.in_ch)
+
+
+def flux_train_loss(c: FluxConfig, params, x0, txt, vec, t, noise):
+    """Rectified-flow v-prediction: x_t = (1-t) x0 + t eps, v* = eps - x0."""
+    tt = t.astype(jnp.float32)[:, None, None, None]
+    x_t = (1 - tt) * x0 + tt * noise
+    g = jnp.full(t.shape, 4.0, jnp.float32) if c.guidance else None
+    v = flux_forward(c, params, x_t, txt, vec, t, g)
+    return jnp.mean((v - (noise - x0)) ** 2), {}
+
+
+def flux_sample_step(c: FluxConfig, params, x_t, txt, vec, t, dt, guidance):
+    """One rectified-flow Euler step: x_{t-dt} = x_t - dt * v(x_t, t)."""
+    v = flux_forward(c, params, x_t, txt, vec, t, guidance)
+    return x_t - dt[:, None, None, None] * v

@@ -1,0 +1,491 @@
+"""Shared neural layers: norms, RoPE, GQA attention (train/prefill/decode),
+SwiGLU MLP, and capacity-dispatched MoE (shared + routed experts, EP-ready).
+
+Everything is a pure function over (cfg-like args, params dict, inputs); the
+param layout for each layer is defined by the matching *_specs() helper so
+abstract_params stays in lock-step with apply.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec, shard, spec
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_specs(dim: int, axis: str = "embed") -> dict:
+    return {"scale": spec((dim,), (axis,), init="ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_specs(dim: int, axis: str = "embed") -> dict:
+    return {"scale": spec((dim,), (axis,), init="ones"), "bias": spec((dim,), (axis,), init="zeros")}
+
+
+def layernorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+def modulate(x, shift, scale):
+    """adaLN modulation (DiT)."""
+    return x * (1.0 + scale[:, None, :]) + shift[:, None, :]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float = 1e6) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 1e6) -> jax.Array:
+    """x: [B, S, H, D]; positions: [B, S] (int)."""
+    freqs = rope_frequencies(x.shape[-1], theta)  # [D/2]
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [B, S, D/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional qk-norm; supports full/causal + KV cache decode)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnCfg:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    causal: bool = True
+    rope: bool = True
+    rope_theta: float = 1e6
+    bias: bool = False
+
+
+def attention_specs(c: AttnCfg) -> dict:
+    d, H, KH, hd = c.d_model, c.n_heads, c.n_kv_heads, c.head_dim
+    s = {
+        "wq": spec((d, H, hd), ("embed", "heads", "head_dim")),
+        "wk": spec((d, KH, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": spec((d, KH, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": spec((H, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if c.bias:
+        s["bq"] = spec((H, hd), ("heads", "head_dim"), init="zeros")
+        s["bk"] = spec((KH, hd), ("kv_heads", "head_dim"), init="zeros")
+        s["bv"] = spec((KH, hd), ("kv_heads", "head_dim"), init="zeros")
+        s["bo"] = spec((d,), ("embed",), init="zeros")
+    if c.qk_norm:
+        s["q_norm"] = rmsnorm_specs(c.head_dim, axis="head_dim")
+        s["k_norm"] = rmsnorm_specs(c.head_dim, axis="head_dim")
+    return s
+
+
+def _qkv(c: AttnCfg, p, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if c.bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if c.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    if c.rope:
+        q = apply_rope(q, positions, c.rope_theta)
+        k = apply_rope(k, positions, c.rope_theta)
+    return q, k, v
+
+
+def _sdpa(c: AttnCfg, q, k, v, mask=None):
+    """q: [B,S,H,hd]; k/v: [B,T,KH,hd] — GQA via head grouping."""
+    B, S, H, hd = q.shape
+    T, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    q = q.reshape(B, S, KH, G, hd)
+    logits = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32) / jnp.sqrt(hd).astype(
+        jnp.float32
+    )
+    if mask is not None:
+        logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(B, S, H, hd)
+
+
+def blockwise_sdpa(q, k, v, *, causal: bool, q_block: int = 512, kv_block: int = 1024):
+    """Memory-safe attention: online-softmax over KV blocks inside a map over
+    Q blocks — O(S * kv_block) workspace instead of O(S^2).  This is also the
+    pure-jnp oracle for the Pallas flash kernel (kernels/flash_attention).
+
+    q: [B,S,H,hd]; k/v: [B,T,KH,hd].
+    """
+    B, S, H, hd = q.shape
+    T, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    pad_q = (-S) % q_block
+    pad_k = (-T) % kv_block
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    Sq, Tk = S + pad_q, T + pad_k
+    nq, nk = Sq // q_block, Tk // kv_block
+
+    qp = qp.reshape(B, nq, q_block, KH, G, hd)
+    kp = kp.reshape(B, nk, kv_block, KH, hd)
+    vp = vp.reshape(B, nk, kv_block, KH, hd)
+
+    def q_block_fn(i):
+        qi = qp[:, i]  # [B, qb, KH, G, hd]
+        q_pos = i * q_block + jnp.arange(q_block)
+
+        def kv_step(carry, j):
+            acc, m, denom = carry
+            kj = kp[:, j]
+            vj = vp[:, j]
+            logits = (
+                jnp.einsum("bqkgd,btkd->bkgqt", qi, kj).astype(jnp.float32) * scale
+            )  # [B,KH,G,qb,kvb]
+            kv_pos = j * kv_block + jnp.arange(kv_block)
+            valid = kv_pos[None, :] < T
+            if causal:
+                valid = valid & (kv_pos[None, :] <= q_pos[:, None])
+            logits = jnp.where(valid[None, None, None], logits, -1e30)
+            m_new = jnp.maximum(m, logits.max(-1))
+            alpha = jnp.exp(m - m_new)
+            pexp = jnp.exp(logits - m_new[..., None])
+            denom = denom * alpha + pexp.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", pexp.astype(vj.dtype), vj
+            ).astype(jnp.float32)
+            return (acc, m_new, denom), None
+
+        acc0 = jnp.zeros((B, KH, G, q_block, hd), jnp.float32)
+        m0 = jnp.full((B, KH, G, q_block), -1e30, jnp.float32)
+        d0 = jnp.zeros((B, KH, G, q_block), jnp.float32)
+        (acc, m, denom), _ = jax.lax.scan(kv_step, (acc0, m0, d0), jnp.arange(nk))
+        out = acc / jnp.maximum(denom[..., None], 1e-30)
+        return out  # [B,KH,G,qb,hd]
+
+    out = jax.lax.map(q_block_fn, jnp.arange(nq))  # [nq,B,KH,G,qb,hd]
+    out = jnp.moveaxis(out, 0, 3).reshape(B, KH, G, Sq, hd)[:, :, :, :S]
+    out = jnp.moveaxis(out, 3, 1).reshape(B, S, KH * G, hd).astype(q.dtype)
+    return out
+
+
+# Above this sequence length, attention() switches to the blockwise path so
+# prefill_32k-scale shapes never materialize an S x S score matrix.
+BLOCKWISE_THRESHOLD = 4096
+
+
+# --- flash-kernel accounting -------------------------------------------------
+# On TPU the Pallas flash kernel (kernels/flash_attention) keeps all score/
+# softmax intermediates in VMEM; their HBM bytes do not exist.  The roofline
+# byte model measures that by re-tracing the model with the attention inner
+# body replaced by a shape-correct phantom (flops are taken from the REAL
+# trace; only bytes come from the phantom trace).  See launch/analysis.
+_FLASH_ACCOUNTING: list[bool] = []
+
+
+class flash_accounting:
+    def __enter__(self):
+        _FLASH_ACCOUNTING.append(True)
+        return self
+
+    def __exit__(self, *exc):
+        _FLASH_ACCOUNTING.pop()
+
+
+def _flash_stub(q, k, v):
+    """Phantom attention: correct output shape/dtype + data deps on k/v,
+    ~zero intermediate bytes (models the in-VMEM kernel)."""
+    dep = (jnp.sum(k[:, :1, :1, :1]) + jnp.sum(v[:, :1, :1, :1])) * 0.0
+    return q * (1.0 + dep).astype(q.dtype)
+
+
+def attention(c: AttnCfg, p, x, *, positions=None, mask=None):
+    """Full (training/prefill) attention. x: [B,S,D]."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    q, k, v = _qkv(c, p, x, positions)
+    if _FLASH_ACCOUNTING:
+        out = _flash_stub(q, k, v)
+    elif S > BLOCKWISE_THRESHOLD and mask is None:
+        out = blockwise_sdpa(q, k, v, causal=c.causal)
+    else:
+        if c.causal and mask is None:
+            mask = jnp.tril(jnp.ones((S, S), bool))[None, None, None, :, :]
+        out = _sdpa(c, q, k, v, mask)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    if c.bias:
+        y = y + p["bo"].astype(x.dtype)
+    return y, (k, v)
+
+
+def quantize_kv(t: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-(token, head) symmetric int8 quantization of K/V [..., KH, hd]."""
+    t32 = t.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(t32), axis=-1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(t32 / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def attention_decode(
+    c: AttnCfg, p, x, cache_k, cache_v, cache_len, *, kv_seq_axis="kv_seq",
+    k_scale=None, v_scale=None,
+):
+    """One-token decode against a KV cache.
+
+    x: [B,1,D]; cache_k/v: [B,T,KH,hd] (pre-filled up to cache_len);
+    cache_len: [] or [B] current length — the new token writes at cache_len.
+    With k_scale/v_scale [B,T,KH] the cache is int8 (paper-aligned: the
+    low-precision path applied to the decode bandwidth bottleneck); the TPU
+    kernel reads int8 + dequantizes in VMEM (modeled by flash accounting).
+    Returns (y [B,1,D], new caches [+ new scales when quantized]).
+    """
+    B, S, _ = x.shape
+    assert S == 1
+    T = cache_k.shape[1]
+    quantized = k_scale is not None
+    pos = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32).reshape(-1, 1), (B, 1))
+    q, k_new, v_new = _qkv(c, p, x, pos)
+    # Write the new token into the cache (dynamic index on the seq dim).
+    idx = jnp.asarray(cache_len, jnp.int32).reshape(())
+    if quantized:
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, kq, idx, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, vq, idx, axis=1)
+        k_scale = jax.lax.dynamic_update_slice_in_dim(k_scale, ks, idx, axis=1)
+        v_scale = jax.lax.dynamic_update_slice_in_dim(v_scale, vs, idx, axis=1)
+    else:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, k_new.astype(cache_k.dtype), idx, axis=1
+        )
+        cache_v = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, v_new.astype(cache_v.dtype), idx, axis=1
+        )
+    cache_k = shard(cache_k, "batch", kv_seq_axis, "kv_heads", "head_dim")
+    cache_v = shard(cache_v, "batch", kv_seq_axis, "kv_heads", "head_dim")
+    if _FLASH_ACCOUNTING:
+        # The kernel reads the cache at its STORED width (int8 when quantized).
+        out = _flash_stub(q, cache_k, cache_v)
+    else:
+        if quantized:
+            k_full = dequantize_kv(cache_k, k_scale, q.dtype)
+            v_full = dequantize_kv(cache_v, v_scale, q.dtype)
+        else:
+            k_full, v_full = cache_k.astype(q.dtype), cache_v.astype(q.dtype)
+        valid = (jnp.arange(T)[None, :] <= idx)[:, None, None, None, :]  # [B,1,1,1,T]
+        out = _sdpa(c, q, k_full, v_full, valid)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    if c.bias:
+        y = y + p["bo"].astype(x.dtype)
+    if quantized:
+        return y, cache_k, cache_v, k_scale, v_scale
+    return y, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def swiglu_specs(d_model: int, d_ff: int, embed_axis: str = "embed") -> dict:
+    return {
+        "w_gate": spec((d_model, d_ff), (embed_axis, "mlp")),
+        "w_up": spec((d_model, d_ff), (embed_axis, "mlp")),
+        "w_down": spec((d_ff, d_model), ("mlp", embed_axis)),
+    }
+
+
+def swiglu(p, x):
+    g = jnp.einsum("...d,df->...f", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, p["w_down"].astype(x.dtype))
+
+
+def mlp_specs(d_model: int, d_ff: int, out_dim: int | None = None) -> dict:
+    out = out_dim or d_model
+    return {
+        "w1": spec((d_model, d_ff), ("embed", "mlp")),
+        "b1": spec((d_ff,), ("mlp",), init="zeros"),
+        "w2": spec((d_ff, out), ("mlp", "embed")),
+        "b2": spec((out,), ("embed",), init="zeros"),
+    }
+
+
+def mlp(p, x, act=jax.nn.gelu):
+    h = act(jnp.einsum("...d,df->...f", x, p["w1"].astype(x.dtype)) + p["b1"].astype(x.dtype))
+    return jnp.einsum("...f,fd->...d", h, p["w2"].astype(x.dtype)) + p["b2"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts — gather-based capacity dispatch (EP over "expert")
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    d_model: int
+    d_ff_expert: int
+    n_experts: int  # routed experts (padded to a shardable count by config)
+    top_k: int
+    n_shared: int = 0
+    d_ff_shared: int = 0  # total shared width (already multiplied)
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.001
+
+
+def moe_specs(c: MoECfg) -> dict:
+    s = {
+        "router": spec((c.d_model, c.n_experts), ("embed", "expert"), scale=0.02),
+        "experts": {
+            "w_gate": spec((c.n_experts, c.d_model, c.d_ff_expert), ("expert", "embed", "mlp")),
+            "w_up": spec((c.n_experts, c.d_model, c.d_ff_expert), ("expert", "embed", "mlp")),
+            "w_down": spec((c.n_experts, c.d_ff_expert, c.d_model), ("expert", "mlp", "embed")),
+        },
+    }
+    if c.n_shared > 0:
+        s["shared"] = swiglu_specs(c.d_model, c.d_ff_shared)
+    return s
+
+
+def _dispatch_indices(eid_flat: jax.Array, n_experts: int, capacity: int):
+    """Per-row dispatch plan from flat expert assignments.
+
+    eid_flat: [N] int32 expert ids (token-major: token t's k-th choice at
+    t*K+k).  Returns (token_idx [E, C], slot_valid [E, C], pos [N], kept [N]):
+    slot (e, c) reads flat token token_idx[e, c]; token n lands in slot
+    (eid[n], pos[n]) iff kept[n].
+    """
+    N = eid_flat.shape[0]
+    order = jnp.argsort(eid_flat, stable=True)  # [N]
+    sorted_eid = eid_flat[order]
+    arange = jnp.arange(N, dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.ones((1,), bool), sorted_eid[1:] != sorted_eid[:-1]])
+    group_start = jax.lax.associative_scan(jnp.maximum, jnp.where(is_start, arange, 0))
+    pos_sorted = arange - group_start  # position within expert group
+    # Inverse permutation: pos for each original flat token.
+    inv = jnp.argsort(order, stable=True)
+    pos = pos_sorted[inv]
+    kept = pos < capacity
+    # Slot -> token mapping via group offsets.
+    group_offset = jnp.searchsorted(sorted_eid, jnp.arange(n_experts, dtype=eid_flat.dtype))
+    counts = (
+        jnp.searchsorted(sorted_eid, jnp.arange(n_experts, dtype=eid_flat.dtype), side="right")
+        - group_offset
+    )
+    slot_c = jnp.arange(capacity, dtype=jnp.int32)[None, :]
+    gather_pos = jnp.clip(group_offset[:, None] + slot_c, 0, N - 1)
+    token_idx = order[gather_pos]  # [E, C]
+    slot_valid = slot_c < counts[:, None]
+    return token_idx, slot_valid, pos, kept
+
+
+def moe(c: MoECfg, p, x):
+    """x: [B, S, D] -> [B, S, D].  Gather-based capacity dispatch:
+
+      router -> top-k -> per-batch-row sort-derived slot plan -> gather tokens
+      into an [E, B, C, D] buffer (E sharded over "model" = EP) -> batched
+      expert SwiGLU -> gather back per (token, k) and weighted-sum.
+
+    Two gathers, no scatter: both directions partition well under SPMD.
+    Overflow tokens (slot >= capacity) drop, standard capacity semantics.
+    """
+    B, S, D = x.shape
+    K, E = c.top_k, c.n_experts
+    N = S * K
+    capacity = int(max(1, round(N / E * c.capacity_factor)))
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, K)  # [B, S, K]
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    eid_flat = top_e.reshape(B, N).astype(jnp.int32)
+    token_idx, slot_valid, pos, kept = jax.vmap(
+        partial(_dispatch_indices, n_experts=E, capacity=capacity)
+    )(eid_flat)
+    # token_idx: [B, E, C] flat indices into S*K; map to source token s = i // K.
+    src_tok = token_idx // K
+    buf = jnp.take_along_axis(
+        x[:, :, None, :], src_tok.reshape(B, -1, 1, 1).astype(jnp.int32), axis=1
+    ).reshape(B, E, capacity, D)
+    buf = jnp.where(slot_valid[..., None], buf, 0.0)
+    buf = jnp.swapaxes(buf, 0, 1)  # [E, B, C, D]
+    buf = shard(buf, "expert", "batch", None, None)
+
+    w = p["experts"]
+    g = jnp.einsum("ebcd,edf->ebcf", buf, w["w_gate"].astype(buf.dtype))
+    u = jnp.einsum("ebcd,edf->ebcf", buf, w["w_up"].astype(buf.dtype))
+    h = jax.nn.silu(g) * u
+    out_buf = jnp.einsum("ebcf,efd->ebcd", h, w["w_down"].astype(buf.dtype))
+    out_buf = shard(out_buf, "expert", "batch", None, None)
+
+    # Combine by scatter-add into [B, S, D] straight from the E-sharded
+    # buffer: each expert shard contributes its slots locally and the
+    # partitioner all-reduces the (much smaller) output — the psum
+    # formulation.  (Reshaping (E,B,C,D)->(B,E*C,D) and gathering instead
+    # makes SPMD materialize the full buffer; §Perf iteration 2.)
+    # slot weight: the routing weight of the token occupying slot (b, e, c).
+    top_w_flat = top_w.reshape(B, N)  # aligned with eid_flat
+    slot_w = jnp.take_along_axis(top_w_flat, token_idx.reshape(B, -1), axis=1).reshape(
+        B, E, capacity
+    )
+    slot_w = jnp.where(slot_valid, slot_w, 0.0)
+    upd = jnp.swapaxes(out_buf, 0, 1) * slot_w[..., None].astype(out_buf.dtype)  # [B,E,C,D]
+
+    def combine_one(upd_b, src_b):  # [E,C,D], [E,C] -> [S,D]
+        return jnp.zeros((S, D), upd_b.dtype).at[src_b.reshape(-1)].add(
+            upd_b.reshape(-1, D), mode="drop"
+        )
+
+    y = jax.vmap(combine_one)(upd, src_tok)
+    y = shard(y, "batch", None, None)
+
+    if c.n_shared > 0:
+        y = y + swiglu(p["shared"], x)
+
+    # Load-balance aux loss (Switch-style): E * sum_e f_e * p_e.
+    me = probs.mean(axis=(0, 1))  # mean router prob per expert
+    ce = jnp.zeros((E,), jnp.float32).at[eid_flat.reshape(-1)].add(1.0) / float(B * N)
+    aux = c.router_aux_weight * E * jnp.sum(me * jax.lax.stop_gradient(ce))
+    return y, aux

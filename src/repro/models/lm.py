@@ -1,0 +1,282 @@
+"""Decoder-only LM family (dense + MoE): qwen3, command-r, qwen2-moe,
+deepseek-moe.  Layers are scanned (stacked params, one compiled block) so
+512-device SPMD compiles stay fast; remat is a config flag.
+
+Entry points (all pure):
+  abstract_params(cfg)                      parameter ParamSpec tree
+  train_loss(cfg, params, tokens, labels)   next-token CE (+ MoE aux)
+  prefill(cfg, params, tokens)              logits[:, -1] + stacked KV cache
+  decode_step(cfg, params, token, cache)    one-token decode
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .common import ParamSpec, shard, spec
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-6
+    moe: L.MoECfg | None = None
+    remat: bool = True
+    # Shard the sequence dim of residual activations over "model" between
+    # blocks (Megatron-SP style) — set per-shape by the launcher.
+    seq_shard_acts: bool = False
+    # KV cache sequence-dim logical axis ("kv_seq" or "long_kv_seq").
+    kv_seq_axis: str = "kv_seq"
+    # int8 KV cache (per-token/head scales): halves the decode memory term.
+    kv_quant: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def attn_cfg(self) -> L.AttnCfg:
+        return L.AttnCfg(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads,
+            head_dim=self.hd,
+            qk_norm=self.qk_norm,
+            causal=True,
+            rope=True,
+            rope_theta=self.rope_theta,
+        )
+
+
+def _stack(specs: Any, n: int) -> Any:
+    """Add a leading scanned 'layers' dim to every spec in the tree."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n, *s.shape), ("layers", *s.axes), s.dtype, s.init, s.scale),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def _block_specs(c: LMConfig) -> dict:
+    s = {
+        "ln1": L.rmsnorm_specs(c.d_model),
+        "attn": L.attention_specs(c.attn_cfg()),
+        "ln2": L.rmsnorm_specs(c.d_model),
+    }
+    if c.moe is not None:
+        s["moe"] = L.moe_specs(c.moe)
+    else:
+        s["ffn"] = L.swiglu_specs(c.d_model, c.d_ff)
+    return s
+
+
+def abstract_params(c: LMConfig) -> dict:
+    return {
+        "embed": spec((c.vocab, c.d_model), (None, "embed_tp"), init="embed", scale=0.02),
+        "blocks": _stack(_block_specs(c), c.n_layers),
+        "ln_f": L.rmsnorm_specs(c.d_model),
+        "head": spec((c.d_model, c.vocab), ("embed", "vocab"), scale=0.02),
+    }
+
+
+def _res_shard(c: LMConfig, x):
+    return shard(x, "batch", "act_seq" if c.seq_shard_acts else "seq", None)
+
+
+def _unshard_seq(c: LMConfig, h):
+    """Megatron-SP gather point: with seq-sharded residuals, materialize the
+    full sequence ONCE per sublayer (one bf16 all-gather) instead of letting
+    the partitioner gather each of K/V/dispatch separately.
+
+    Only a win when gathering x is cheaper than gathering K+V, i.e. when
+    2 * n_kv * head_dim >= d_model.  For strongly-grouped GQA (command-r:
+    KV dims = d_model/8) the partitioner's K/V gathers move 8x fewer bytes
+    than an x gather would — leave those alone (§Perf iteration 3)."""
+    if c.seq_shard_acts and 2 * c.n_kv_heads * c.hd >= c.d_model:
+        return shard(h, "batch", None, None)
+    return h
+
+
+def _block_train(c: LMConfig, p, x):
+    h = _unshard_seq(c, L.rmsnorm(p["ln1"], x, c.norm_eps))
+    a, _kv = L.attention(c.attn_cfg(), p["attn"], h)
+    x = _res_shard(c, x + a)
+    h = _unshard_seq(c, L.rmsnorm(p["ln2"], x, c.norm_eps))
+    if c.moe is not None:
+        f, aux = L.moe(c.moe, p["moe"], h)
+    else:
+        f, aux = L.swiglu(p["ffn"], h), 0.0
+    return _res_shard(c, x + f), jnp.asarray(aux, jnp.float32)
+
+
+def forward(c: LMConfig, params, tokens):
+    """tokens [B,S] -> (hidden [B,S,D], aux loss)."""
+    x = params["embed"].astype(jnp.bfloat16)[tokens]
+    x = _res_shard(c, x)
+
+    def body(carry, blk):
+        x = carry
+        fn = partial(_block_train, c)
+        if c.remat:
+            fn = jax.checkpoint(fn)
+        x, aux = fn(blk, x)
+        return x, aux
+
+    x, auxes = jax.lax.scan(body, x, params["blocks"])
+    x = L.rmsnorm(params["ln_f"], x, c.norm_eps)
+    return x, jnp.sum(auxes)
+
+
+def logits_fn(c: LMConfig, params, hidden):
+    out = jnp.einsum("bsd,dv->bsv", hidden, params["head"].astype(hidden.dtype))
+    return shard(out, "batch", None, "vocab")
+
+
+def train_loss(c: LMConfig, params, tokens, labels):
+    """Mean next-token cross-entropy; labels = tokens shifted by the pipeline.
+    Label id < 0 masks the position out."""
+    hidden, aux = forward(c, params, tokens)
+    logits = logits_fn(c, params, hidden).astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = jnp.sum((lse - gold) * mask) / jnp.maximum(mask.sum(), 1.0)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with stacked KV cache
+# ---------------------------------------------------------------------------
+
+
+def make_cache(c: LMConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    shape = (c.n_layers, batch, max_len, c.n_kv_heads, c.hd)
+    if c.kv_quant:
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.ones(shape[:-1], jnp.float32),
+            "v_scale": jnp.ones(shape[:-1], jnp.float32),
+            "len": jnp.zeros((), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_specs(c: LMConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    shape = (c.n_layers, batch, max_len, c.n_kv_heads, c.hd)
+    axes = ("layers", "batch", c.kv_seq_axis, "kv_heads", "head_dim")
+    if c.kv_quant:
+        return {
+            "k": spec(shape, axes, dtype=jnp.int8, init="zeros"),
+            "v": spec(shape, axes, dtype=jnp.int8, init="zeros"),
+            "k_scale": spec(shape[:-1], axes[:-1], dtype=jnp.float32, init="ones"),
+            "v_scale": spec(shape[:-1], axes[:-1], dtype=jnp.float32, init="ones"),
+            "len": spec((), (), dtype=jnp.int32, init="zeros"),
+        }
+    return {
+        "k": spec(shape, axes, dtype=dtype, init="zeros"),
+        "v": spec(shape, axes, dtype=dtype, init="zeros"),
+        "len": spec((), (), dtype=jnp.int32, init="zeros"),
+    }
+
+
+def prefill(c: LMConfig, params, tokens, max_len: int | None = None):
+    """Full forward over the prompt; returns (last-token logits, cache)."""
+    B, S = tokens.shape
+    max_len = max_len or S
+    x = params["embed"].astype(jnp.bfloat16)[tokens]
+    x = _res_shard(c, x)
+
+    def body(x, blk):
+        h = _unshard_seq(c, L.rmsnorm(blk["ln1"], x, c.norm_eps))
+        a, (k, v) = L.attention(c.attn_cfg(), blk["attn"], h)
+        x = _res_shard(c, x + a)
+        h = _unshard_seq(c, L.rmsnorm(blk["ln2"], x, c.norm_eps))
+        if c.moe is not None:
+            f, _ = L.moe(c.moe, blk["moe"], h)
+        else:
+            f = L.swiglu(blk["ffn"], h)
+        x = _res_shard(c, x + f)
+        return x, (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16))
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["blocks"])
+    x = L.rmsnorm(params["ln_f"], x, c.norm_eps)
+    logits = logits_fn(c, params, x[:, -1:, :])
+    pad = max_len - S
+    if pad > 0:
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    ks = shard(ks, "layers", "batch", c.kv_seq_axis, "kv_heads", "head_dim")
+    vs = shard(vs, "layers", "batch", c.kv_seq_axis, "kv_heads", "head_dim")
+    if c.kv_quant:
+        kq, ksc = L.quantize_kv(ks)
+        vq, vsc = L.quantize_kv(vs)
+        cache = {
+            "k": kq, "v": vq, "k_scale": ksc, "v_scale": vsc,
+            "len": jnp.asarray(S, jnp.int32),
+        }
+    else:
+        cache = {"k": ks, "v": vs, "len": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(c: LMConfig, params, token, cache):
+    """token [B,1] int32; cache from make_cache/prefill.  Returns
+    (logits [B,1,V], new cache)."""
+    x = params["embed"].astype(jnp.bfloat16)[token]
+    x = shard(x, "batch", None, None)
+    quant = c.kv_quant
+
+    def body(x, blk_and_cache):
+        if quant:
+            blk, ck, cv, ks, vs = blk_and_cache
+            h = L.rmsnorm(blk["ln1"], x, c.norm_eps)
+            a, nk, nv, nks_, nvs_ = L.attention_decode(
+                c.attn_cfg(), blk["attn"], h, ck, cv, cache["len"],
+                kv_seq_axis=c.kv_seq_axis, k_scale=ks, v_scale=vs,
+            )
+            extra = (nk, nv, nks_, nvs_)
+        else:
+            blk, ck, cv = blk_and_cache
+            h = L.rmsnorm(blk["ln1"], x, c.norm_eps)
+            a, nk, nv = L.attention_decode(
+                c.attn_cfg(), blk["attn"], h, ck, cv, cache["len"], kv_seq_axis=c.kv_seq_axis
+            )
+            extra = (nk, nv)
+        x = x + a
+        h = L.rmsnorm(blk["ln2"], x, c.norm_eps)
+        if c.moe is not None:
+            f, _ = L.moe(c.moe, blk["moe"], h)
+        else:
+            f = L.swiglu(blk["ffn"], h)
+        return x + f, extra
+
+    if quant:
+        xs = (params["blocks"], cache["k"], cache["v"], cache["k_scale"], cache["v_scale"])
+        x, (nks, nvs, nkss, nvss) = jax.lax.scan(body, x, xs)
+        new_cache = {
+            "k": nks, "v": nvs, "k_scale": nkss, "v_scale": nvss, "len": cache["len"] + 1
+        }
+    else:
+        x, (nks, nvs) = jax.lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]))
+        new_cache = {"k": nks, "v": nvs, "len": cache["len"] + 1}
+    x = L.rmsnorm(params["ln_f"], x, c.norm_eps)
+    logits = logits_fn(c, params, x)
+    return logits, new_cache

@@ -1,0 +1,286 @@
+"""Vision transformers: ViT (plain) and Swin (windowed, shifted).
+
+Both are encoder-only classifiers: forward(cfg, params, images) -> logits.
+Patch embedding IS part of the model (per the assignment: vision archs embed
+their own stem, unlike the LM pool's VLM stubs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from .common import ParamSpec, shard, spec
+from .lm import _stack
+
+# ---------------------------------------------------------------------------
+# ViT
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ViTConfig:
+    name: str
+    img_res: int
+    patch: int
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    n_classes: int = 1000
+    remat: bool = False
+
+    @property
+    def n_patches(self) -> int:
+        return (self.img_res // self.patch) ** 2
+
+    def attn_cfg(self) -> L.AttnCfg:
+        return L.AttnCfg(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            n_kv_heads=self.n_heads,
+            head_dim=self.d_model // self.n_heads,
+            causal=False,
+            rope=False,
+            bias=True,
+        )
+
+
+def _vit_block_specs(c: ViTConfig) -> dict:
+    return {
+        "ln1": L.layernorm_specs(c.d_model),
+        "attn": L.attention_specs(c.attn_cfg()),
+        "ln2": L.layernorm_specs(c.d_model),
+        "mlp": L.mlp_specs(c.d_model, c.d_ff),
+    }
+
+
+def vit_abstract_params(c: ViTConfig) -> dict:
+    return {
+        "patch_embed": {
+            "w": spec((c.patch, c.patch, 3, c.d_model), (None, None, "conv_in", "embed"), init="conv"),
+            "b": spec((c.d_model,), ("embed",), init="zeros"),
+        },
+        "cls": spec((1, 1, c.d_model), (None, None, "embed"), scale=0.02),
+        "pos": spec((1, c.n_patches + 1, c.d_model), (None, None, "embed"), scale=0.02),
+        "blocks": _stack(_vit_block_specs(c), c.n_layers),
+        "ln_f": L.layernorm_specs(c.d_model),
+        "head": {
+            "w": spec((c.d_model, c.n_classes), ("embed", "vocab")),
+            "b": spec((c.n_classes,), ("vocab",), init="zeros"),
+        },
+    }
+
+
+def _vit_block(c: ViTConfig, p, x):
+    a, _ = L.attention(c.attn_cfg(), p["attn"], L.layernorm(p["ln1"], x))
+    x = shard(x + a, "batch", None, None)
+    f = L.mlp(p["mlp"], L.layernorm(p["ln2"], x))
+    return shard(x + f, "batch", None, None)
+
+
+def vit_forward(c: ViTConfig, params, images):
+    """images: [B, H, W, 3] -> logits [B, n_classes]."""
+    B = images.shape[0]
+    w = params["patch_embed"]["w"].astype(jnp.bfloat16)
+    x = jax.lax.conv_general_dilated(
+        images.astype(jnp.bfloat16),
+        w,
+        window_strides=(c.patch, c.patch),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    x = x.reshape(B, -1, c.d_model) + params["patch_embed"]["b"].astype(jnp.bfloat16)
+    cls = jnp.broadcast_to(params["cls"].astype(x.dtype), (B, 1, c.d_model))
+    x = jnp.concatenate([cls, x], axis=1) + params["pos"].astype(x.dtype)
+    x = shard(x, "batch", None, None)
+
+    def body(x, blk):
+        fn = partial(_vit_block, c)
+        if c.remat:
+            fn = jax.checkpoint(fn)
+        return fn(blk, x), None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    x = L.layernorm(params["ln_f"], x)
+    h = x[:, 0]
+    logits = h @ params["head"]["w"].astype(h.dtype) + params["head"]["b"].astype(h.dtype)
+    return logits.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Swin
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SwinConfig:
+    name: str
+    img_res: int
+    patch: int = 4
+    window: int = 7
+    depths: tuple[int, ...] = (2, 2, 18, 2)
+    dims: tuple[int, ...] = (128, 256, 512, 1024)
+    n_heads: tuple[int, ...] = (4, 8, 16, 32)
+    mlp_ratio: int = 4
+    n_classes: int = 1000
+    remat: bool = False
+
+
+def _swin_attn_cfg(dim: int, heads: int) -> L.AttnCfg:
+    return L.AttnCfg(
+        d_model=dim,
+        n_heads=heads,
+        n_kv_heads=heads,
+        head_dim=dim // heads,
+        causal=False,
+        rope=False,
+        bias=True,
+    )
+
+
+def _swin_block_specs(c: SwinConfig, dim: int, heads: int) -> dict:
+    w = c.window
+    return {
+        "ln1": L.layernorm_specs(dim),
+        "attn": L.attention_specs(_swin_attn_cfg(dim, heads)),
+        "rel_bias": spec(((2 * w - 1) * (2 * w - 1), heads), (None, "heads"), scale=0.02),
+        "ln2": L.layernorm_specs(dim),
+        "mlp": L.mlp_specs(dim, dim * c.mlp_ratio),
+    }
+
+
+def swin_abstract_params(c: SwinConfig) -> dict:
+    p: dict = {
+        "patch_embed": {
+            "w": spec((c.patch, c.patch, 3, c.dims[0]), (None, None, "conv_in", "embed"), init="conv"),
+            "b": spec((c.dims[0],), ("embed",), init="zeros"),
+            "ln": L.layernorm_specs(c.dims[0]),
+        }
+    }
+    for i, (depth, dim, heads) in enumerate(zip(c.depths, c.dims, c.n_heads)):
+        stage: dict = {"blocks": _stack(_swin_block_specs(c, dim, heads), depth)}
+        if i < len(c.depths) - 1:
+            stage["merge"] = {
+                "ln": L.layernorm_specs(4 * dim),
+                "w": spec((4 * dim, c.dims[i + 1]), ("embed", "mlp")),
+            }
+        p[f"stage{i}"] = stage
+    p["ln_f"] = L.layernorm_specs(c.dims[-1])
+    p["head"] = {
+        "w": spec((c.dims[-1], c.n_classes), ("embed", "vocab")),
+        "b": spec((c.n_classes,), ("vocab",), init="zeros"),
+    }
+    return p
+
+
+def _rel_bias_index(w: int) -> np.ndarray:
+    coords = np.stack(np.meshgrid(np.arange(w), np.arange(w), indexing="ij"), 0).reshape(2, -1)
+    rel = coords[:, :, None] - coords[:, None, :]
+    rel = rel.transpose(1, 2, 0) + (w - 1)
+    return (rel[..., 0] * (2 * w - 1) + rel[..., 1]).astype(np.int32)  # [w*w, w*w]
+
+
+def _window_attention(c: SwinConfig, dim: int, heads: int, p, x, H: int, W: int, shift: int):
+    """x: [B, H*W, dim] -> same, windowed MSA with optional cyclic shift."""
+    B = x.shape[0]
+    w = c.window
+    xs = x.reshape(B, H, W, dim)
+    if shift:
+        xs = jnp.roll(xs, shift=(-shift, -shift), axis=(1, 2))
+    nh, nw = H // w, W // w
+    xw = xs.reshape(B, nh, w, nw, w, dim).transpose(0, 1, 3, 2, 4, 5).reshape(B * nh * nw, w * w, dim)
+
+    bias = p["rel_bias"][_rel_bias_index(w).reshape(-1)].reshape(w * w, w * w, heads)
+    bias = bias.transpose(2, 0, 1)[None, :, None, :, :]  # [1, KH, 1(G), S, T]
+    mask = None
+    if shift:
+        img_mask = np.zeros((1, H, W, 1), np.int32)
+        cnt = 0
+        for hsl in (slice(0, -w), slice(-w, -shift), slice(-shift, None)):
+            for wsl in (slice(0, -w), slice(-w, -shift), slice(-shift, None)):
+                img_mask[:, hsl, wsl, :] = cnt
+                cnt += 1
+        mw = img_mask.reshape(1, nh, w, nw, w, 1).transpose(0, 1, 3, 2, 4, 5).reshape(nh * nw, w * w)
+        attn_mask = mw[:, None, :] == mw[:, :, None]  # [nW, S, T]
+        mask = jnp.asarray(attn_mask)[:, None, None, :, :]  # [nW,1,1,S,T]
+        mask = jnp.tile(mask, (B, 1, 1, 1, 1))
+
+    ac = _swin_attn_cfg(dim, heads)
+    q, k, v = L._qkv(ac, p, xw, jnp.zeros(xw.shape[:2], jnp.int32))
+    BW, S, H_, hd = q.shape
+    qg = q.reshape(BW, S, heads, 1, hd)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) / np.sqrt(hd)
+    logits = logits + bias.astype(jnp.float32)
+    if mask is not None:
+        logits = jnp.where(mask, logits, -1e30)
+    attn = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", attn, v).reshape(BW, S, heads, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(xw.dtype)) + p["bo"].astype(xw.dtype)
+
+    ys = y.reshape(B, nh, nw, w, w, dim).transpose(0, 1, 3, 2, 4, 5).reshape(B, H, W, dim)
+    if shift:
+        ys = jnp.roll(ys, shift=(shift, shift), axis=(1, 2))
+    return ys.reshape(B, H * W, dim)
+
+
+def swin_forward(c: SwinConfig, params, images):
+    """images: [B, H, W, 3] -> logits [B, n_classes]."""
+    B = images.shape[0]
+    pe = params["patch_embed"]
+    x = jax.lax.conv_general_dilated(
+        images.astype(jnp.bfloat16),
+        pe["w"].astype(jnp.bfloat16),
+        window_strides=(c.patch, c.patch),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    H = W = c.img_res // c.patch
+    x = x.reshape(B, H * W, c.dims[0]) + pe["b"].astype(jnp.bfloat16)
+    x = L.layernorm(pe["ln"], x)
+
+    for i, (depth, dim, heads) in enumerate(zip(c.depths, c.dims, c.n_heads)):
+        stage = params[f"stage{i}"]
+
+        def body(carry, sblk, dim=dim, heads=heads, H=H, W=W):
+            x, idx = carry
+
+            def blk_fn(p, x, shift):
+                a = _window_attention(c, dim, heads, p["attn"] | {"rel_bias": p["rel_bias"]},
+                                      L.layernorm(p["ln1"], x), H, W, shift)
+                x = shard(x + a, "batch", None, None)
+                f = L.mlp(p["mlp"], L.layernorm(p["ln2"], x))
+                return shard(x + f, "batch", None, None)
+
+            # Canonical Swin: no shift when one window covers the feature map.
+            shift_amt = c.window // 2 if H > c.window else 0
+            if shift_amt:
+                x = jax.lax.cond(
+                    idx % 2 == 1,
+                    lambda x: blk_fn(sblk, x, shift_amt),
+                    lambda x: blk_fn(sblk, x, 0),
+                    x,
+                )
+            else:
+                x = blk_fn(sblk, x, 0)
+            return (x, idx + 1), None
+
+        (x, _), _ = jax.lax.scan(body, (x, jnp.asarray(0)), stage["blocks"])
+
+        if i < len(c.depths) - 1:
+            # Patch merging: 2x2 neighborhood concat + linear down-projection.
+            xs = x.reshape(B, H, W, dim)
+            xs = xs.reshape(B, H // 2, 2, W // 2, 2, dim).transpose(0, 1, 3, 2, 4, 5)
+            xs = xs.reshape(B, (H // 2) * (W // 2), 4 * dim)
+            xs = L.layernorm(stage["merge"]["ln"], xs)
+            x = jnp.einsum("bsd,dk->bsk", xs, stage["merge"]["w"].astype(xs.dtype))
+            H, W = H // 2, W // 2
+
+    x = L.layernorm(params["ln_f"], x)
+    h = x.mean(axis=1)
+    logits = h @ params["head"]["w"].astype(h.dtype) + params["head"]["b"].astype(h.dtype)
+    return logits.astype(jnp.float32)

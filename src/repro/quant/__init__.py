@@ -1,0 +1,7 @@
+from .quantize import (  # noqa: F401
+    QuantStats,
+    agreement,
+    fake_quant_tree,
+    npu_variant,
+    quant_error_stats,
+)

@@ -1,0 +1,1 @@
+from .engine import EndpointStats, FrameResult, ModelEndpoint, VideoServer, make_synthetic_video  # noqa: F401

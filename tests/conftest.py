@@ -1,0 +1,9 @@
+import os
+import sys
+from pathlib import Path
+
+# Tests must see the real single CPU device (the dry-run sets 512 in its own
+# process); make sure no leaked XLA_FLAGS reach us.
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))

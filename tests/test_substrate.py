@@ -1,0 +1,273 @@
+"""Substrate tests: optimizer, checkpoint (sync/async/restart determinism),
+data pipeline skip-ahead, fault-tolerance units, elastic remesh planning,
+sharding rules."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.arch import ShapeSpec
+from repro.launch import steps
+from repro.train import optim
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_converges_quadratic():
+    c = optim.AdamWConfig(lr=0.1, warmup_steps=5, total_steps=200, weight_decay=0.0, grad_clip=0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = optim.init_opt_state(params)
+    for _ in range(200):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, opt, _ = optim.adamw_update(c, params, g, opt)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.05
+
+
+def test_grad_clip_bounds_update():
+    c = optim.AdamWConfig(lr=1.0, grad_clip=1.0, warmup_steps=0, total_steps=10, weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    opt = optim.init_opt_state(params)
+    g = {"w": jnp.full(4, 1e6)}
+    p2, _, metrics = optim.adamw_update(c, params, g, opt)
+    assert float(metrics["grad_norm"]) == pytest.approx(2e6, rel=1e-3)
+    assert bool(jnp.all(jnp.isfinite(p2["w"])))
+
+
+def test_lr_schedule_shape():
+    c = optim.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    lrs = [float(optim.lr_at(c, jnp.asarray(s))) for s in [0, 5, 10, 50, 100]]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0, rel=0.2)
+    assert lrs[4] == pytest.approx(0.1, rel=1e-3)
+    assert lrs[3] < lrs[2]
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+def _tiny_state():
+    return {
+        "params": {"w": jnp.arange(6.0).reshape(2, 3), "b": jnp.ones(3)},
+        "opt": {"step": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro import checkpoint as ck
+
+    state = _tiny_state()
+    ck.save(tmp_path, 3, state, {"loss": 1.5})
+    assert ck.latest_step(tmp_path) == 3
+    restored, extra = ck.restore(tmp_path, 3, jax.tree.map(jnp.zeros_like, state))
+    assert extra["loss"] == 1.5
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    from repro import checkpoint as ck
+
+    ck.save(tmp_path, 1, _tiny_state())
+    bad = _tiny_state()
+    bad["params"]["w"] = jnp.zeros((3, 3))
+    with pytest.raises(ValueError, match="shape"):
+        ck.restore(tmp_path, 1, bad)
+
+
+def test_async_checkpointer(tmp_path):
+    from repro import checkpoint as ck
+
+    acp = ck.AsyncCheckpointer(tmp_path)
+    state = _tiny_state()
+    for s in (1, 2, 3):
+        acp.save(s, state, {"s": s})
+    acp.close()
+    assert ck.latest_step(tmp_path) == 3
+
+
+def test_train_restart_determinism(tmp_path):
+    """Training N steps straight == training k, restarting, training N-k."""
+    from repro.launch import train as T
+
+    common = [
+        "--arch", "resnet-50", "--smoke", "--batch", "2", "--img", "32", "--seed", "3",
+        "--total-steps", "8",
+    ]
+    full = T.main(common + ["--steps", "8"])
+    part = T.main(common + ["--steps", "4", "--ckpt-dir", str(tmp_path), "--ckpt-every", "4"])
+    resumed = T.main(
+        common + ["--steps", "8", "--ckpt-dir", str(tmp_path), "--ckpt-every", "100", "--resume"]
+    )
+    assert resumed["last_loss"] == pytest.approx(full["last_loss"], rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_data_counter_mode_determinism():
+    from repro.data import DataSpec, SyntheticStream
+
+    a = configs.get("qwen3-0.6b", smoke=True)
+    a = dataclasses.replace(a, shapes=(ShapeSpec("t", "train", 2, seq=16),))
+    s1 = SyntheticStream(DataSpec(a, a.shape("t"), seed=5))
+    s2 = SyntheticStream(DataSpec(a, a.shape("t"), seed=5))
+    b1, b2 = s1.batch_at(42), s2.batch_at(42)
+    for k in b1:
+        np.testing.assert_array_equal(b1[k], b2[k])
+    assert not np.array_equal(s1.batch_at(42)["tokens"], s1.batch_at(43)["tokens"])
+
+
+def test_data_iterator_skip_ahead():
+    from repro.data import DataSpec, SyntheticStream, make_batch_iterator
+
+    a = configs.get("qwen3-0.6b", smoke=True)
+    a = dataclasses.replace(a, shapes=(ShapeSpec("t", "train", 2, seq=16),))
+    stream = SyntheticStream(DataSpec(a, a.shape("t"), seed=5))
+    it = make_batch_iterator(stream, start_step=10, prefetch=1)
+    first = next(it)
+    np.testing.assert_array_equal(first["tokens"], stream.batch_at(10)["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance / elasticity
+# ---------------------------------------------------------------------------
+
+
+def test_heartbeat_detection():
+    from repro.runtime import HeartbeatMonitor, WorkerState
+
+    t = [0.0]
+    mon = HeartbeatMonitor(interval_s=1.0, suspect_after=2.0, dead_after=5.0, clock=lambda: t[0])
+    for w in ("a", "b"):
+        mon.register(w)
+    t[0] = 1.5
+    mon.beat("a")
+    t[0] = 3.0  # b silent for 3s -> suspect
+    changed = mon.sweep()
+    assert changed == {"b": WorkerState.SUSPECT}
+    t[0] = 7.0  # b silent for 7s -> dead; a silent 5.5 -> dead too
+    changed = mon.sweep()
+    assert changed["b"] is WorkerState.DEAD
+    assert "b" in mon.dead()
+
+
+def test_straggler_detection_and_mitigation():
+    from repro.runtime import StragglerMitigator
+
+    m = StragglerMitigator(threshold=1.5, min_samples=3)
+    for step in range(5):
+        for w in range(8):
+            m.observe(f"w{w}", 1.0)
+        m.observe("slow", 2.5)
+    assert m.stragglers() == ["slow"]
+    assert m.mitigation("slow") == "rebalance_input"
+    for _ in range(10):
+        m.observe("slow", 10.0)
+    assert m.mitigation("slow") == "replace"
+
+
+def test_elastic_remesh_plans():
+    from repro.runtime import plan_elastic_remesh
+
+    # full 2 pods
+    p = plan_elastic_remesh(512)
+    assert p.mesh_shape == (2, 16, 16)
+    # lost part of a pod: model axis preserved, data axis takes the survivors
+    p = plan_elastic_remesh(300)
+    assert p.mesh_shape == (18, 16) and p.dropped_chips == 300 - 288
+    # deeper loss: shrink data axis further, keep model axis
+    p = plan_elastic_remesh(200)
+    assert p.mesh_shape == (12, 16)
+    with pytest.raises(ValueError):
+        plan_elastic_remesh(8)
+
+
+def test_checkpoint_restore_resharded(tmp_path):
+    from repro import checkpoint as ck
+
+    state = _tiny_state()
+    ck.save(tmp_path, 1, state)
+    shardings = jax.tree.map(lambda x: None, state)
+    restored, _ = ck.restore_resharded(tmp_path, 1, state, shardings)
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"]), np.asarray(state["params"]["w"])
+    )
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+
+def test_sharding_rules_guards():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.common import ParamSpec
+    from repro.sharding.rules import MeshRules, train_rules
+
+    mesh = make_host_mesh(data=1, model=1)
+    rules = MeshRules(mesh, {"a": "data", "b": "model", "c": ("data", "model")})
+    # extent 1 -> everything replicated
+    assert rules._resolve((8, 8), ("a", "b")) == P()
+
+
+def test_sharding_divisibility_and_reuse(monkeypatch):
+    import subprocess
+    import sys
+
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import make_host_mesh
+from repro.sharding.rules import MeshRules, train_rules
+mesh = make_host_mesh(data=2, model=4)
+rules = MeshRules(mesh, train_rules(mesh))
+# divisible dims shard; non-divisible are skipped
+assert rules._resolve((8, 12), ("embed", "mlp")) == P("data", "model")
+assert rules._resolve((8, 10), ("embed", "mlp")) == P("data"), rules._resolve((8,10),("embed","mlp"))
+# the same mesh axis is never used twice in one spec
+got = rules._resolve((8, 8, 4), ("mlp", "heads", "kv_heads"))
+assert got == P("model"), got
+print("OK")
+"""
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, cwd="."
+    )
+    assert "OK" in out.stdout, out.stderr
+
+
+def test_grad_accumulation_matches_full_batch():
+    """accum_steps=2 on the same global batch == a single full-batch step
+    (the elastic lever that preserves batch semantics on a shrunk mesh)."""
+    a = configs.get("vit-s16", smoke=True)
+    a = dataclasses.replace(a, shapes=(ShapeSpec("t", "classify_train", 4, img=32),))
+    kw = dict(adamw=optim.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10, grad_clip=0.0))
+    p1 = steps.build_cell(a, "t", **kw)
+    p2 = steps.build_cell(a, "t", accum_steps=2, **kw)
+    ts1 = p1.init_args(jax.random.key(0))[0]
+    ts2 = p2.init_args(jax.random.key(0))[0]
+    batch = p1.init_args(jax.random.key(1))[1]
+    ts1, m1 = p1.jit()(ts1, batch)
+    ts2, m2 = p2.jit()(ts2, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-5)
+    assert float(m1["grad_norm"]) == pytest.approx(float(m2["grad_norm"]), rel=5e-2)
+    # bf16 microbatch rounding + Adam's ~sign(g)*lr first step means per-param
+    # agreement is only up to the update magnitude; bound by 2.5*lr.
+    for x, y in zip(jax.tree.leaves(ts1["params"]), jax.tree.leaves(ts2["params"])):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=2.5e-3)
