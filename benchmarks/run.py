@@ -6,10 +6,17 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 
 def main() -> None:
-    from benchmarks import adaptivity_bench, kernels_bench, paper_figures, roofline_bench
+    from benchmarks import (
+        adaptivity_bench,
+        kernels_bench,
+        multistream_bench,
+        paper_figures,
+        roofline_bench,
+    )
 
     print("name,us_per_call,derived")
-    for group in (paper_figures.ALL, adaptivity_bench.ALL, kernels_bench.ALL, roofline_bench.ALL):
+    for group in (paper_figures.ALL, adaptivity_bench.ALL, kernels_bench.ALL,
+                  roofline_bench.ALL, multistream_bench.ALL):
         for bench in group:
             for name, us, derived in bench():
                 print(f"{name},{us:.2f},{derived:.6f}", flush=True)

@@ -9,6 +9,8 @@ Public surface:
   baselines                   — Offload / Local / DeepDecision (§VI.C)
   brute_force                 — Optimal oracle (exhaustive + grid DP)
   simulator.simulate          — audited stream replay
+  simulator.simulate_multi    — N streams, shared fluid uplink + server queue
+  edge_server                 — multi-tenant admission/bandwidth scheduler
   jax_sched                   — jitted lax implementations of both DPs
   controller.OnlineController — streaming controller w/ bandwidth estimation
 """
@@ -16,6 +18,7 @@ from . import (  # noqa: F401
     baselines,
     brute_force,
     controller,
+    edge_server,
     jax_sched,
     max_accuracy,
     max_utility,
@@ -24,6 +27,7 @@ from . import (  # noqa: F401
     simulator,
 )
 from .controller import BandwidthEstimator, OnlineController  # noqa: F401
+from .edge_server import EdgeClient, EdgeServerScheduler, make_fleet  # noqa: F401
 from .profiles import (  # noqa: F401
     PAPER_MODELS,
     PAPER_STREAM,
@@ -36,4 +40,10 @@ from .profiles import (  # noqa: F401
     profile_ms,
 )
 from .schedule import Decision, RoundPlan, StreamStats, Where  # noqa: F401
-from .simulator import Trace, make_policy, simulate  # noqa: F401
+from .simulator import (  # noqa: F401
+    MultiStreamStats,
+    Trace,
+    make_policy,
+    simulate,
+    simulate_multi,
+)

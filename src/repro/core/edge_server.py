@@ -1,0 +1,283 @@
+"""Multi-stream edge-server scheduling: N clients share one uplink + one edge.
+
+The paper (and this repo's §IV/§V solvers) plan for ONE phone talking to an
+idle edge server.  This module is the first step toward the ROADMAP's
+"edge serving a fleet" north star: an :class:`EdgeServerScheduler` admits N
+concurrent :class:`EdgeClient` streams, splits the shared uplink bandwidth and
+the server's worker pool across them, and lets each client fall back to its
+local NPU plan when the edge is saturated.  The per-stream Max-Accuracy /
+Max-Utility solvers are reused unchanged as the inner loop — a client simply
+plans against the *allocated* share of the link instead of the whole link, and
+both solvers already degrade to a pure-local plan when their bandwidth is too
+small to offload (see docs/scheduling.md, "Edge-server admission").
+
+Allocation policies (``EdgeServerScheduler(policy=...)``):
+
+  weighted_fair  static weighted share: client i may lease at most
+                 ``B * w_i / sum_j w_j`` of the link, further clipped to what
+                 is left unleased — so concurrent grants never exceed B.
+  priority       weighted-fair with effective weight ``w_i * 2**priority_i``,
+                 plus slot reservation: a client is denied an offload slot
+                 while every free server worker is "spoken for" by a distinct
+                 higher-priority client that holds no slot.
+  fifo           the naive baseline: every client assumes it owns the whole
+                 link and the server admits jobs first-come-first-served.
+                 Under contention the fluid link model (simulator.simulate_multi)
+                 stretches the overlapping uploads and deadlines blow up —
+                 this is the strawman the coordinated policies beat.
+
+The scheduler is deliberately *mechanism only*: it never inspects frames or
+plans, just grants (bandwidth, slot) leases.  The audited ground truth —
+whether an offload actually made its deadline once the shared link and the
+server queue are accounted for — lives in ``simulator.simulate_multi``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence
+
+from .profiles import ModelProfile, NetworkState, StreamSpec
+
+ALLOCATION_POLICIES = ("weighted_fair", "priority", "fifo")
+
+
+@dataclass
+class EdgeClient:
+    """One tenant stream: a phone running the FastVA controller.
+
+    ``weight`` steers weighted-fair bandwidth shares; ``priority`` (higher =
+    more important) steers the ``priority`` policy.  ``policy_name``/``alpha``
+    pick the *inner* per-stream solver (max_accuracy / max_utility / any name
+    ``simulator.make_policy`` knows).
+    """
+
+    client_id: int
+    stream: StreamSpec
+    models: Sequence[ModelProfile]
+    weight: float = 1.0
+    priority: int = 0
+    policy_name: str = "max_accuracy"
+    alpha: float | None = None
+
+    def __post_init__(self) -> None:
+        from .simulator import make_policy  # local import: simulator imports us
+
+        self._policy = make_policy(self.policy_name, alpha=self.alpha)
+
+    def plan(self, net: NetworkState, *, npu_free: float):
+        """One inner-solver round against this client's allocated bandwidth."""
+        return self._policy(list(self.models), self.stream, net, npu_free=npu_free)
+
+
+@dataclass
+class _Lease:
+    """An in-flight offload: granted uplink rate + a server worker slot.
+
+    The link portion frees when the upload completes (``release_link``); the
+    worker slot frees when the server finishes the job (``release``).
+    """
+
+    client_id: int
+    bps: float
+    link_active: bool = True
+
+
+@dataclass
+class SchedulerAudit:
+    """Counters the tests and benchmarks assert on (see tests/test_edge_server.py)."""
+
+    grants: int = 0
+    denials: int = 0
+    max_concurrent_bps: float = 0.0  # peak sum of simultaneously leased bandwidth
+    max_concurrent_jobs: int = 0
+
+
+class EdgeServerScheduler:
+    """Admission + bandwidth allocation for N streams sharing one edge server.
+
+    Usage (the simulator drives this loop):
+
+        grant_bps = sched.allocate(client_id, t, net)   # 0.0 => go local
+        ... client plans against NetworkState(grant_bps, net.rtt) ...
+        sched.register(client_id, grant_bps)            # if the plan offloads
+        ... upload completes ...
+        sched.release_link(client_id)                   # frees bandwidth
+        ... server job completes ...
+        sched.release(client_id)                        # frees the worker slot
+
+    ``capacity`` is the server's worker-slot count: at most ``capacity``
+    offload jobs may be in flight (uploading or executing) at once — except
+    under the uncoordinated ``fifo`` policy, where admission is a no-op and
+    the pain shows up as queueing delay instead.
+
+    Server-model capacity is rationed with a backlog gate: ``register`` feeds
+    each admitted job's server seconds into an aggregate busy-until estimate
+    (work divided across the ``capacity`` workers), and ``allocate`` denies
+    offloads while the expected queue delay exceeds ``backlog_limit`` seconds.
+    Without this gate a single client at 30 fps can legally submit 69 ms jobs
+    every 33 ms and build an unbounded queue that misses every deadline.
+    """
+
+    def __init__(
+        self,
+        clients: Sequence[EdgeClient],
+        *,
+        policy: str = "weighted_fair",
+        capacity: int = 4,
+        backlog_limit: float = 0.0,
+    ):
+        if policy not in ALLOCATION_POLICIES:
+            raise ValueError(f"unknown allocation policy {policy!r}; want one of {ALLOCATION_POLICIES}")
+        self.clients = {c.client_id: c for c in clients}
+        if len(self.clients) != len(clients):
+            raise ValueError("duplicate client_id in clients")
+        self.policy = policy
+        self.capacity = int(capacity)
+        self.backlog_limit = float(backlog_limit)
+        # One client may hold several leases at once (a policy that offloads
+        # several frames per round, or an upload stretched past the client's
+        # next round) — hence a list per client, drained FIFO.
+        self.leases: dict[int, list[_Lease]] = {}
+        self.server_busy_until = 0.0  # abs time the admitted server work drains
+        self.audit = SchedulerAudit()
+
+    # -- weights -----------------------------------------------------------
+    def _effective_weight(self, c: EdgeClient) -> float:
+        if self.policy == "priority":
+            return c.weight * (2.0 ** c.priority)
+        return c.weight
+
+    def _total_weight(self) -> float:
+        return sum(self._effective_weight(c) for c in self.clients.values()) or 1.0
+
+    # -- allocation --------------------------------------------------------
+    def allocate(self, client_id: int, t: float, net: NetworkState) -> float:
+        """Grant an uplink rate (bps) for one offload round; 0.0 means denied.
+
+        A grant is only a *quote* — it reserves nothing until ``register`` is
+        called (the client may plan a pure-local round and never lease).
+        """
+        c = self.clients[client_id]
+        if self.policy == "fifo":
+            # Uncoordinated: everyone believes the link is theirs.
+            self.audit.grants += 1
+            return net.bandwidth_bps
+
+        # ONE of the client's own still-held leases (typically the server
+        # tail of its previous round) never blocks its next request — but
+        # only one, else a single client could queue unboundedly many jobs
+        # past ``capacity`` whenever backlog_limit is loosened.
+        own = len(self.leases.get(client_id, ()))
+        effective = self._n_leases() - min(own, 1)
+        backlogged = self.server_busy_until - t > self.backlog_limit
+        if effective >= self.capacity or backlogged or self._slots_reserved_above(c):
+            self.audit.denials += 1
+            return 0.0
+
+        used = self._link_reserved(exclude=client_id)
+        available = max(net.bandwidth_bps - used, 0.0)
+        share = net.bandwidth_bps * self._effective_weight(c) / self._total_weight()
+        grant = min(share, available)
+        if grant <= 0.0:
+            self.audit.denials += 1
+            return 0.0
+        self.audit.grants += 1
+        return grant
+
+    def _n_leases(self) -> int:
+        return sum(len(ls) for ls in self.leases.values())
+
+    def _link_reserved(self, exclude: int | None = None) -> float:
+        """Bandwidth currently reserved on the link.  A client's uplink is
+        serial (the simulator transmits its oldest upload only), so its many
+        leases reserve max(bps), not the sum."""
+        return sum(
+            max((l.bps for l in ls if l.link_active), default=0.0)
+            for cid, ls in self.leases.items()
+            if cid != exclude
+        )
+
+    def _slots_reserved_above(self, c: EdgeClient) -> bool:
+        """Priority policy: hold free slots for higher-priority slotless clients."""
+        if self.policy != "priority":
+            return False
+        free = self.capacity - self._n_leases()
+        higher_waiting = sum(
+            1
+            for other in self.clients.values()
+            if other.priority > c.priority and not self.leases.get(other.client_id)
+        )
+        return free <= higher_waiting
+
+    # -- lease lifecycle ---------------------------------------------------
+    def register(self, client_id: int, bps: float, *, t: float = 0.0, server_s: float = 0.0) -> None:
+        """The client's round really does offload: consume the granted lease.
+
+        ``server_s`` is the admitted job's server-side service time; it feeds
+        the backlog gate (conservatively anchored at ``t``, i.e. as if the job
+        reached the server instantly — uploads only push it later).
+        """
+        if self.policy != "fifo":
+            self.server_busy_until = max(self.server_busy_until, t) + server_s / max(self.capacity, 1)
+        self.leases.setdefault(client_id, []).append(_Lease(client_id, bps))
+        self.audit.max_concurrent_jobs = max(self.audit.max_concurrent_jobs, self._n_leases())
+        if self.policy != "fifo":
+            self.audit.max_concurrent_bps = max(
+                self.audit.max_concurrent_bps, self._link_reserved()
+            )
+
+    def release_link(self, client_id: int) -> None:
+        """The client's oldest in-flight upload finished: free its bandwidth."""
+        for lease in self.leases.get(client_id, []):
+            if lease.link_active:
+                lease.link_active = False
+                return
+
+    def release(self, client_id: int) -> None:
+        """The client's oldest admitted job left the server: free its slot."""
+        ls = self.leases.get(client_id)
+        if ls:
+            ls.pop(0)
+            if not ls:
+                del self.leases[client_id]
+
+    def reset(self) -> None:
+        """Forget all leases, backlog, and audit counters.
+
+        ``simulate_multi`` calls this on entry so one scheduler can be
+        replayed across runs: without it the backlog estimate
+        (``server_busy_until``) from a previous run — whose clock also
+        started at 0 — would deny every offload of the next one.
+        """
+        self.leases.clear()
+        self.server_busy_until = 0.0
+        self.audit = SchedulerAudit()
+
+
+def make_fleet(
+    n: int,
+    *,
+    stream: StreamSpec | None = None,
+    models: Sequence[ModelProfile] | None = None,
+    policy_name: str = "max_accuracy",
+    alpha: float | None = None,
+    weights: Sequence[float] | None = None,
+    priorities: Sequence[int] | None = None,
+) -> list[EdgeClient]:
+    """Convenience: N identical tenants (benchmarks, tests, the demo)."""
+    from .profiles import PAPER_MODELS, PAPER_STREAM
+
+    stream = stream if stream is not None else PAPER_STREAM
+    models = list(models) if models is not None else list(PAPER_MODELS)
+    return [
+        EdgeClient(
+            client_id=i,
+            stream=stream,
+            models=models,
+            weight=weights[i] if weights is not None else 1.0,
+            priority=priorities[i] if priorities is not None else 0,
+            policy_name=policy_name,
+            alpha=alpha,
+        )
+        for i in range(n)
+    ]

@@ -16,6 +16,9 @@ Implementation notes vs the paper's pseudocode:
   * The DP uses conservative rounding (durations ceil'd to the grid, deadlines
     floor'd) so any extracted schedule is feasible in continuous time; the
     final Decision timestamps are recomputed exactly.
+
+A prose walkthrough of the DP grid (and how the multi-tenant edge server
+reuses this solver as its inner loop) lives in docs/scheduling.md.
 """
 from __future__ import annotations
 

@@ -13,6 +13,9 @@ Differences from the paper's pseudocode, both robustness fixes:
     matching (lines 19-27 of Algorithm 2);
   * ``n_l = floor(S/(B*gamma))`` — Algorithm 2 line 9 says ``S/B`` which is a
     time, not a frame count; §IV and the text define the frame count form.
+
+docs/scheduling.md explains the weighted objective and the Pareto pruning in
+prose, alongside the edge-server admission logic that wraps this solver.
 """
 from __future__ import annotations
 

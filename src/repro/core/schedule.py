@@ -56,6 +56,7 @@ class StreamStats:
     frames_total: int = 0
     frames_processed: int = 0
     frames_missed_deadline: int = 0
+    frames_offloaded: int = 0  # subset of processed that ran on the edge
     accuracy_sum: float = 0.0
     elapsed: float = 0.0
     schedule_calls: int = 0

@@ -5,6 +5,17 @@ The simulator is the ground truth for every figure benchmark: policies only
 *propose* plans; accuracy/utility are re-derived here from the profiles, and
 ``validate_plan`` rejects any deadline/overlap violation (a violating frame
 counts as missed, accuracy 0 — defence against buggy policies).
+
+Two entry points:
+  simulate        one stream, the paper's setting (§VI figures);
+  simulate_multi  N streams contending for one shared uplink + edge server,
+                  driven by ``edge_server.EdgeServerScheduler`` (see
+                  docs/scheduling.md, "Edge-server admission").  Uploads share
+                  the link as a fluid: each in-flight transfer gets a
+                  weight-proportional share of ``Trace`` bandwidth, capped at
+                  its scheduler-granted rate — so coordinated clients see
+                  exactly what they were promised, while uncoordinated (fifo)
+                  clients stretch each other's uploads and miss deadlines.
 """
 from __future__ import annotations
 
@@ -127,3 +138,291 @@ def make_policy(name: str, *, alpha: float | None = None, **kw) -> Policy:
             m, s, n, npu_free=npu_free, alpha=alpha, **kw
         )
     raise ValueError(f"unknown policy {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Multi-stream simulation: N clients, one shared uplink, one edge server.
+# ---------------------------------------------------------------------------
+
+_EPS = 1e-9
+# An upload also counts as delivered below this many residual bits (far below
+# any real frame — smallest is ~24k bits).  The primary completion mechanism
+# is by event identity (see ``due`` in ``simulate_multi``); this threshold
+# only mops up transfers that cross zero during a planning-event advance.
+_BITS_EPS = 1e-3
+
+
+@dataclass
+class _Upload:
+    """One in-flight offloaded frame on the shared (fluid) uplink."""
+
+    client_id: int
+    bits_left: float
+    weight: float
+    rate_cap: float  # scheduler-granted bps; inf under the fifo policy
+    deadline_abs: float
+    accuracy: float
+    t_server: float
+    rtt: float
+    start_at: float = 0.0  # abs time the frame exists and may start uploading
+
+
+@dataclass
+class MultiStreamStats:
+    """Per-client audited stats plus fleet-level aggregates."""
+
+    per_client: list[StreamStats]
+    server_jobs: int = 0
+    server_busy_s: float = 0.0
+    elapsed: float = 0.0
+
+    @property
+    def aggregate_accuracy(self) -> float:
+        """Fleet mean accuracy over all frames of all clients (missed = 0)."""
+        total = sum(s.frames_total for s in self.per_client)
+        return sum(s.accuracy_sum for s in self.per_client) / total if total else 0.0
+
+    @property
+    def miss_rates(self) -> list[float]:
+        return [
+            s.frames_missed_deadline / s.frames_total if s.frames_total else 0.0
+            for s in self.per_client
+        ]
+
+    @property
+    def max_miss_rate(self) -> float:
+        return max(self.miss_rates, default=0.0)
+
+    @property
+    def server_utilization(self) -> float:
+        return self.server_busy_s / self.elapsed if self.elapsed > 0 else 0.0
+
+
+def _fluid_rates(bandwidth_bps: float, uploads: Sequence[_Upload]) -> list[float]:
+    """Weighted max-min (water-filling) split of the link across uploads.
+
+    Each upload asks for its weight-proportional share but never exceeds its
+    ``rate_cap``; capped uploads return their leftover to the pool.  When the
+    caps are scheduler grants summing to <= B this degenerates to "everyone
+    transmits at the granted rate"; with infinite caps (fifo) it is plain
+    weighted processor sharing.
+    """
+    rates = [0.0] * len(uploads)
+    active = list(range(len(uploads)))
+    remaining = max(bandwidth_bps, 0.0)
+    while active and remaining > _EPS:
+        total_w = sum(uploads[i].weight for i in active) or 1.0
+        capped = [i for i in active if uploads[i].rate_cap <= remaining * uploads[i].weight / total_w + _EPS]
+        if not capped:
+            for i in active:
+                rates[i] = remaining * uploads[i].weight / total_w
+            return rates
+        for i in capped:
+            rates[i] = uploads[i].rate_cap
+            remaining -= uploads[i].rate_cap
+        remaining = max(remaining, 0.0)
+        active = [i for i in active if i not in capped]
+    return rates
+
+
+def simulate_multi(
+    scheduler,
+    trace: Trace,
+    n_frames: int,
+    *,
+    strict: bool = True,
+) -> MultiStreamStats:
+    """Drive every client of ``scheduler`` (an ``EdgeServerScheduler``) for
+    ``n_frames`` frames each over one shared ``trace``.
+
+    Event loop: the next event is either some client's round boundary (it
+    plans against its *allocated* bandwidth) or an upload completing on the
+    fluid link.  NPU decisions are audited exactly as in :func:`simulate`;
+    offloaded frames are audited at *actual* completion — shared-link upload
+    time, then a server worker (FIFO queue over ``scheduler.capacity`` slots),
+    then the RTT — so a plan that assumed more bandwidth than the link really
+    delivers shows up as deadline misses here, not as optimistic accuracy.
+    """
+    scheduler.reset()  # clock restarts at 0; stale leases/backlog must not leak in
+    clients = list(scheduler.clients.values())
+    stats = {
+        c.client_id: StreamStats(frames_total=n_frames, elapsed=n_frames * c.stream.gamma)
+        for c in clients
+    }
+    head = {c.client_id: 0 for c in clients}
+    npu_busy_abs = {c.client_id: 0.0 for c in clients}
+    uploads: list[_Upload] = []
+    n_workers = max(int(scheduler.capacity), 1)
+    worker_free = [0.0] * n_workers
+    server_jobs = 0
+    server_busy = 0.0
+    now = 0.0
+
+    def next_plan_event() -> tuple[float, "object"] | None:
+        best = None
+        for c in clients:
+            if head[c.client_id] >= n_frames:
+                continue
+            t = head[c.client_id] * c.stream.gamma
+            key = (t, -c.priority, -c.weight, c.client_id)
+            if best is None or key < best[0]:
+                best = (key, c)
+        return (best[0][0], best[1]) if best is not None else None
+
+    # Server-slot leases are held until the job leaves the server, not just
+    # until its upload drains: (abs finish time, client_id), kept sorted.
+    pending_releases: list[tuple[float, int]] = []
+
+    while True:
+        plan_ev = next_plan_event()
+        # Earliest upload completion under current rates (piecewise-constant
+        # approximation: rates are re-evaluated at every event boundary).
+        # A client's radio is serial: only its OLDEST pending upload transmits
+        # (later frames of a multi-offload round queue behind it), and frames
+        # that have not arrived yet (start_at in the future) hold no link
+        # share; their activation is an event of its own.
+        heads: dict[int, _Upload] = {}
+        for u in uploads:
+            heads.setdefault(u.client_id, u)
+        active = [u for u in heads.values() if u.start_at <= now + _EPS]
+        rates = _fluid_rates(trace.at(now).bandwidth_bps, active) if active else []
+        t_done = None
+        due: list[_Upload] = []
+        if active:
+            finish_at = [
+                now + (u.bits_left / r if r > _EPS else float("inf"))
+                for u, r in zip(active, rates)
+            ]
+            t_done = min(finish_at)
+            if t_done < float("inf"):
+                # Completion events drain by identity, not by a residual-bits
+                # threshold: near the end of a transfer the remaining time can
+                # underflow ``now + dt == now`` and a threshold test livelocks.
+                due = [u for u, t in zip(active, finish_at) if t <= t_done + _EPS]
+            else:
+                t_done = None
+        t_start = min(
+            (u.start_at for u in heads.values() if u.start_at > now + _EPS), default=None
+        )
+        events = [t for t in (t_done, t_start) if t is not None]
+        if plan_ev is not None:
+            events.append(plan_ev[0])
+        if not events:
+            break
+        t_next = min(events)
+        client = plan_ev[1] if plan_ev is not None and plan_ev[0] <= t_next + _EPS else None
+
+        # Advance the fluid link to t_next (active uploads only).
+        if active and t_next > now:
+            for u, r in zip(active, rates):
+                u.bits_left = max(0.0, u.bits_left - r * (t_next - now))
+        if t_done is not None and t_next >= t_done - _EPS:
+            for u in due:  # this IS the completion event for these uploads
+                u.bits_left = 0.0
+        now = max(now, t_next)
+
+        # Free server slots whose jobs have finished by now.
+        while pending_releases and pending_releases[0][0] <= now + _EPS:
+            scheduler.release(pending_releases.pop(0)[1])
+
+        # Drain any uploads that finished: server queue, then deadline audit.
+        # Only head uploads can have transmitted, so queued ones stay put.
+        still: list[_Upload] = []
+        for u in uploads:
+            if u.bits_left > _BITS_EPS or u.start_at > now + _EPS:
+                still.append(u)
+                continue
+            scheduler.release_link(u.client_id)
+            wi = min(range(n_workers), key=lambda i: worker_free[i])
+            start = max(now, worker_free[wi])
+            finish = start + u.t_server
+            worker_free[wi] = finish
+            server_jobs += 1
+            server_busy += u.t_server
+            pending_releases.append((finish, u.client_id))
+            pending_releases.sort()
+            s = stats[u.client_id]
+            if finish + u.rtt <= u.deadline_abs + _EPS:
+                s.frames_processed += 1
+                s.frames_offloaded += 1
+                s.accuracy_sum += u.accuracy
+            else:
+                s.frames_missed_deadline += 1
+        uploads = still
+
+        if client is None:
+            continue
+
+        # Round boundary for ``client``: allocate, plan, execute.
+        cid = client.client_id
+        t0 = head[cid] * client.stream.gamma
+        net_full = trace.at(t0)
+        grant = scheduler.allocate(cid, t0, net_full)
+        net_c = NetworkState(bandwidth_bps=grant, rtt=net_full.rtt)
+        s = stats[cid]
+        wall = time.perf_counter()
+        plan = client.plan(net_c, npu_free=max(0.0, npu_busy_abs[cid] - t0))
+        s.schedule_time += time.perf_counter() - wall
+        s.schedule_calls += 1
+
+        horizon = max(plan.horizon, 1)
+        npu_only = RoundPlan(
+            decisions=[d for d in plan.decisions if d.where is Where.NPU],
+            horizon=horizon,
+        )
+        errors = (
+            validate_plan(npu_only, gamma=client.stream.gamma, deadline=client.stream.deadline)
+            if strict
+            else []
+        )
+        bad_frames = {int(e.split()[1].rstrip(":")) for e in errors} if errors else set()
+
+        for d in plan.decisions:
+            if d.frame >= horizon or head[cid] + d.frame >= n_frames:
+                continue
+            if not d.is_processed():
+                continue
+            m = client.models[d.model]
+            if d.where is Where.NPU:
+                if d.frame in bad_frames:
+                    continue
+                s.frames_processed += 1
+                s.accuracy_sum += m.accuracy(client.stream.r_max, where="npu")
+            else:  # SERVER: hand to the shared link; audited on completion.
+                scheduler.register(cid, grant, t=t0, server_s=m.t_server)
+                uploads.append(
+                    _Upload(
+                        client_id=cid,
+                        bits_left=client.stream.frame_bytes(d.resolution) * 8.0,
+                        weight=max(client.weight, _EPS),
+                        rate_cap=grant if scheduler.policy != "fifo" else float("inf"),
+                        deadline_abs=t0 + d.frame * client.stream.gamma + client.stream.deadline,
+                        accuracy=m.accuracy(d.resolution, where="server"),
+                        t_server=m.t_server,
+                        rtt=net_full.rtt,
+                        # The plan's start is round-relative; a frame cannot
+                        # transmit before it exists (matters for policies that
+                        # offload non-head frames, e.g. DeepDecision).
+                        start_at=t0 + max(d.start, 0.0),
+                    )
+                )
+        s.frames_missed_deadline += len(bad_frames)
+        npu_busy_abs[cid] = t0 + plan.npu_busy_until
+        head[cid] += horizon
+
+    # Uploads stranded at exit (link went dead with frames in flight): every
+    # one is a deadline miss, and its leases must not leak.
+    for u in uploads:
+        scheduler.release_link(u.client_id)
+        scheduler.release(u.client_id)
+        stats[u.client_id].frames_missed_deadline += 1
+    for _, cid in pending_releases:
+        scheduler.release(cid)
+
+    elapsed = max((s.elapsed for s in stats.values()), default=0.0)
+    return MultiStreamStats(
+        per_client=[stats[c.client_id] for c in clients],
+        server_jobs=server_jobs,
+        server_busy_s=server_busy,
+        elapsed=elapsed,
+    )

@@ -1,1 +1,11 @@
-from .engine import EndpointStats, FrameResult, ModelEndpoint, VideoServer, make_synthetic_video  # noqa: F401
+from .engine import (  # noqa: F401
+    BatchedEndpoint,
+    BatchStats,
+    EdgeBatchServer,
+    EndpointStats,
+    FrameResult,
+    ModelEndpoint,
+    OffloadRequest,
+    VideoServer,
+    make_synthetic_video,
+)

@@ -3,6 +3,12 @@
 Pieces:
   ModelEndpoint        a jitted classifier forward (full-precision "edge"
                        variant or int8 "NPU" variant) with measured latency.
+  BatchedEndpoint      the multi-tenant variant: pads request batches to a
+                       small set of power-of-two bucket sizes so every batch
+                       shape hits an already-compiled jitted forward.
+  EdgeBatchServer      coalesces offloaded frames from many clients into ONE
+                       forward per model per tick (the serving half of
+                       core/edge_server.py's multi-stream scheduler).
   VideoServer          consumes a frame stream; every round it asks the
                        OnlineController (Max-Accuracy / Max-Utility) where to
                        run each frame, executes the decisions on the REAL
@@ -56,6 +62,139 @@ class ModelEndpoint:
 
     def warmup(self, images: jax.Array) -> None:
         self.forward(images).block_until_ready()
+
+
+@dataclasses.dataclass
+class BatchStats:
+    flushes: int = 0
+    frames: int = 0
+    padded: int = 0  # wasted rows added to reach a bucket size
+    total_s: float = 0.0
+
+    @property
+    def mean_batch(self) -> float:
+        return self.frames / self.flushes if self.flushes else 0.0
+
+    @property
+    def pad_fraction(self) -> float:
+        submitted = self.frames + self.padded
+        return self.padded / submitted if submitted else 0.0
+
+
+class BatchedEndpoint:
+    """A deployed model variant serving MANY clients per forward call.
+
+    Batches are padded up to the next bucket size (powers of two up to
+    ``max_batch``) so the jitted forward compiles once per bucket instead of
+    once per observed batch size; the pad rows are sliced off the output.
+    Oversized batches are split into ``max_batch`` chunks.
+    """
+
+    def __init__(
+        self,
+        name: str,
+        forward: Callable[[jax.Array], jax.Array],
+        *,
+        profile_latency_s: float = 0.0,
+        max_batch: int = 32,
+    ):
+        self.name = name
+        self.forward = jax.jit(forward)
+        self.profile_latency_s = profile_latency_s
+        self.max_batch = int(max_batch)
+        # max_batch itself is always a bucket: __call__ chunks by max_batch,
+        # so full chunks must land on a warmed shape even when max_batch is
+        # not a power of two.
+        self.buckets = tuple(
+            b for b in (1, 2, 4, 8, 16, 32, 64, 128, 256) if b < self.max_batch
+        ) + (self.max_batch,)
+        self.stats = BatchStats()
+
+    def _bucket(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return self.max_batch
+
+    def __call__(self, images: np.ndarray) -> np.ndarray:
+        """forward over [B, H, W, C]; any B >= 1, bucket-padded internally."""
+        if len(images) == 0:
+            # The output feature shape is unknowable without running the
+            # model, so an empty batch cannot return a consistent array.
+            raise ValueError(f"{self.name}: empty batch (need B >= 1)")
+        t0 = time.perf_counter()
+        outs = []
+        for lo in range(0, len(images), self.max_batch):
+            chunk = images[lo : lo + self.max_batch]
+            b = self._bucket(len(chunk))
+            pad = b - len(chunk)
+            x = jnp.asarray(
+                np.concatenate([chunk, np.zeros((pad, *chunk.shape[1:]), chunk.dtype)])
+                if pad
+                else chunk
+            )
+            out = np.asarray(self.forward(x))
+            outs.append(out[: len(chunk)])
+            self.stats.padded += pad
+        self.stats.flushes += 1
+        self.stats.frames += len(images)
+        self.stats.total_s += time.perf_counter() - t0
+        return np.concatenate(outs)
+
+    def warmup(self, sample: np.ndarray) -> None:
+        """Pre-compile every bucket shape so serving never hits a compile."""
+        for b in self.buckets:
+            x = np.broadcast_to(sample[None], (b, *sample.shape)).copy()
+            self.forward(jnp.asarray(x)).block_until_ready()
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadRequest:
+    """One frame a client ships to the edge (what the uplink carried)."""
+
+    client_id: int
+    frame_id: int
+    model: int  # index into the shared model/profile list
+    image: np.ndarray
+
+
+class EdgeBatchServer:
+    """Coalesces offloaded frames from N clients into one forward per model.
+
+    ``submit`` enqueues requests as they arrive during a tick; ``flush``
+    groups the queue by model, runs each group through its
+    :class:`BatchedEndpoint` as a single padded batch, and returns
+    ``{(client_id, frame_id): logits_row}``.  Numerics are identical to
+    calling the endpoint per-frame (tests/test_edge_server.py asserts it) —
+    batching only changes throughput, never answers.
+    """
+
+    def __init__(self, endpoints: dict[int, BatchedEndpoint]):
+        self.endpoints = endpoints
+        self.queue: list[OffloadRequest] = []
+
+    def submit(self, req: OffloadRequest) -> None:
+        if req.model not in self.endpoints:
+            raise KeyError(f"no endpoint deployed for model index {req.model}")
+        self.queue.append(req)
+
+    def pending(self) -> int:
+        return len(self.queue)
+
+    def flush(self) -> dict[tuple[int, int], np.ndarray]:
+        by_model: dict[int, list[OffloadRequest]] = {}
+        for req in self.queue:
+            by_model.setdefault(req.model, []).append(req)
+        results: dict[tuple[int, int], np.ndarray] = {}
+        for model, reqs in by_model.items():
+            batch = np.stack([r.image for r in reqs])
+            logits = self.endpoints[model](batch)
+            for r, row in zip(reqs, logits):
+                results[(r.client_id, r.frame_id)] = row
+        # Clear only after every forward succeeded, so a mid-flush failure
+        # leaves the queue intact for retry instead of dropping requests.
+        self.queue = []
+        return results
 
 
 @dataclasses.dataclass

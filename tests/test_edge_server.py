@@ -1,0 +1,183 @@
+"""Multi-stream edge-server tests: bandwidth-sharing invariants, graceful
+degradation under saturation, and batched-endpoint numerics.
+
+Covers the three acceptance properties of the multi-tenant subsystem:
+  * per-client bandwidth grants never oversubscribe the trace bandwidth;
+  * when the edge is saturated every client falls back to its local NPU plan
+    (and matches the single-stream Local policy exactly);
+  * the batched serving endpoint returns the same logits as per-frame calls.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    EdgeServerScheduler,
+    Trace,
+    make_fleet,
+    make_policy,
+    network_mbps,
+    simulate,
+    simulate_multi,
+)
+from repro.core.profiles import PAPER_MODELS, PAPER_STREAM
+from repro.core.simulator import _Upload, _fluid_rates
+
+N_FRAMES = 30
+
+
+def _run(n, policy, *, mbps=12.0, capacity=4, frames=N_FRAMES, **fleet_kw):
+    sched = EdgeServerScheduler(make_fleet(n, **fleet_kw), policy=policy, capacity=capacity)
+    return sched, simulate_multi(sched, Trace.constant(mbps), frames)
+
+
+# ---------------------------------------------------------------------------
+# Bandwidth-sharing invariants
+# ---------------------------------------------------------------------------
+
+def test_concurrent_grants_never_exceed_trace_bandwidth():
+    sched, ms = _run(4, "weighted_fair", mbps=12.0)
+    assert sum(s.frames_offloaded for s in ms.per_client) > 0  # offloads happened
+    assert sched.audit.max_concurrent_bps <= 12e6 + 1e-6
+
+
+def test_allocate_respects_static_weighted_shares():
+    B = network_mbps(10.0)
+    fleet = make_fleet(4, weights=[3.0, 1.0, 1.0, 1.0])
+    sched = EdgeServerScheduler(fleet, policy="weighted_fair", capacity=4)
+    grants = [sched.allocate(c.client_id, 0.0, B) for c in fleet]
+    # Static share bound: B * w_i / sum(w), never more.
+    for g, c in zip(grants, fleet):
+        assert g <= 10e6 * c.weight / 6.0 + 1e-6
+    assert grants[0] == pytest.approx(3.0 * grants[1], rel=1e-9)
+
+
+def test_fifo_grants_whole_link_to_everyone():
+    B = network_mbps(5.0)
+    fleet = make_fleet(3)
+    sched = EdgeServerScheduler(fleet, policy="fifo", capacity=1)
+    for c in fleet:
+        assert sched.allocate(c.client_id, 0.0, B) == pytest.approx(5e6)
+
+
+def test_fluid_rates_waterfilling():
+    def up(weight, cap):
+        return _Upload(0, 1.0, weight, cap, 0.0, 0.0, 0.0, 0.0)
+
+    # Caps sum below B: everyone transmits at cap (coordinated case).
+    rates = _fluid_rates(10e6, [up(1, 3e6), up(1, 4e6)])
+    assert rates == pytest.approx([3e6, 4e6])
+    # Infinite caps: weighted processor sharing (fifo case).
+    rates = _fluid_rates(9e6, [up(2, float("inf")), up(1, float("inf"))])
+    assert rates == pytest.approx([6e6, 3e6])
+    # One capped flow returns its leftover to the uncapped one.
+    rates = _fluid_rates(10e6, [up(1, 1e6), up(1, float("inf"))])
+    assert rates == pytest.approx([1e6, 9e6])
+    assert sum(rates) <= 10e6 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Graceful degradation under saturation
+# ---------------------------------------------------------------------------
+
+def test_saturated_edge_degrades_to_pure_local():
+    """capacity=0: every offload is denied; each client must match the
+    single-stream Local policy exactly (same DP, no deadline misses)."""
+    sched, ms = _run(3, "weighted_fair", capacity=0)
+    local = simulate(
+        make_policy("local"), list(PAPER_MODELS), PAPER_STREAM, Trace.constant(12.0), N_FRAMES
+    )
+    for s in ms.per_client:
+        assert s.frames_offloaded == 0
+        assert s.frames_missed_deadline == 0
+        assert s.frames_processed == local.frames_processed
+        assert s.accuracy_sum == pytest.approx(local.accuracy_sum)
+    assert sched.audit.denials > 0 and sched.audit.grants == 0
+
+
+def test_zero_bandwidth_runs_all_local_without_hanging():
+    _, ms = _run(2, "weighted_fair", mbps=0.0)
+    for s in ms.per_client:
+        assert s.frames_offloaded == 0
+        assert s.frames_processed > 0
+
+
+def test_miss_rate_stays_bounded_as_fleet_grows():
+    for n in (1, 2, 4):
+        _, ms = _run(n, "weighted_fair", mbps=6.0)
+        assert ms.max_miss_rate <= 0.10, f"miss rate blew up at n={n}"
+
+
+def test_weighted_fair_beats_naive_fifo_under_contention():
+    _, wf = _run(2, "weighted_fair", mbps=6.0)
+    _, fifo = _run(2, "fifo", mbps=6.0)
+    assert wf.aggregate_accuracy > fifo.aggregate_accuracy
+    assert wf.max_miss_rate <= fifo.max_miss_rate
+
+
+def test_priority_clients_keep_the_edge_when_slots_are_scarce():
+    sched, ms = _run(4, "priority", capacity=1, priorities=[0, 0, 2, 2])
+    low = sum(ms.per_client[i].frames_offloaded for i in (0, 1))
+    high = sum(ms.per_client[i].frames_offloaded for i in (2, 3))
+    assert high > 0
+    assert low == 0
+    # Denied clients still process frames locally at full rate.
+    for i in (0, 1):
+        assert ms.per_client[i].frames_processed == N_FRAMES
+
+
+# ---------------------------------------------------------------------------
+# Batched endpoint numerics
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def toy_endpoint():
+    import jax.numpy as jnp
+
+    from repro.serving import BatchedEndpoint
+
+    W = jnp.asarray(
+        np.random.default_rng(0).standard_normal((4 * 4 * 3, 10)).astype(np.float32)
+    )
+
+    def forward(x):
+        return jnp.tanh(x).reshape(x.shape[0], -1) @ W
+
+    ep = BatchedEndpoint("toy", forward, max_batch=8)
+    ep.warmup(np.zeros((4, 4, 3), np.float32))
+    return ep
+
+
+def test_batched_endpoint_matches_per_frame(toy_endpoint):
+    frames = np.random.default_rng(1).standard_normal((11, 4, 4, 3)).astype(np.float32)
+    batched = toy_endpoint(frames)  # 11 -> buckets 8 + 4(pad 1)
+    single = np.concatenate([toy_endpoint(frames[i : i + 1]) for i in range(len(frames))])
+    np.testing.assert_allclose(batched, single, atol=1e-5)
+
+
+def test_edge_batch_server_coalesces_and_routes(toy_endpoint):
+    from repro.serving import EdgeBatchServer, OffloadRequest
+
+    frames = np.random.default_rng(2).standard_normal((6, 4, 4, 3)).astype(np.float32)
+    server = EdgeBatchServer({0: toy_endpoint})
+    flushes_before = toy_endpoint.stats.flushes
+    for cid in range(3):
+        for f in range(2):
+            server.submit(OffloadRequest(cid, f, 0, frames[cid * 2 + f]))
+    assert server.pending() == 6
+    out = server.flush()
+    assert server.pending() == 0
+    assert toy_endpoint.stats.flushes == flushes_before + 1  # ONE forward for all 6
+    for cid in range(3):
+        for f in range(2):
+            expect = toy_endpoint(frames[cid * 2 + f][None])[0]
+            np.testing.assert_allclose(out[(cid, f)], expect, atol=1e-5)
+
+
+def test_edge_batch_server_rejects_unknown_model(toy_endpoint):
+    from repro.serving import EdgeBatchServer, OffloadRequest
+
+    server = EdgeBatchServer({0: toy_endpoint})
+    with pytest.raises(KeyError):
+        server.submit(OffloadRequest(0, 0, 99, np.zeros((4, 4, 3), np.float32)))

@@ -3,12 +3,14 @@ swept over shapes and dtypes, plus hypothesis property tests on the
 quantization scheme."""
 from __future__ import annotations
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import HealthCheck, given, settings  # noqa: E402
 
 from repro.kernels.flash_attention import kernel as fk
 from repro.kernels.flash_attention import ref as fr

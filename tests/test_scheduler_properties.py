@@ -10,10 +10,12 @@ Invariants:
 """
 from __future__ import annotations
 
-import hypothesis.strategies as st
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import HealthCheck, given, settings  # noqa: E402
 
 from repro.core import (
     PAPER_MODELS,
