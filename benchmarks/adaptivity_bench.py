@@ -2,57 +2,41 @@
 per run).  A WiFi-like square-wave trace alternates 3.5 <-> 0.8 Mbps; the
 online controller must ride through the drops.
 
-derived = mean accuracy.  Rows compare the oracle-B policies against the
-same policy driven by the EWMA BandwidthEstimator (pessimism 0.9) fed only
-by observed uploads — the deployable configuration.
+derived = mean accuracy.  Rows compare the oracle-B policies (``run_sim``:
+the policy sees the true trace) against the same policy driven through
+``Session.run_online`` — the EWMA ``BandwidthEstimator`` fed only by observed
+uploads and audited against the true trace, i.e. the deployable configuration.
 """
 from __future__ import annotations
 
-from repro.core import (
-    PAPER_MODELS,
-    PAPER_STREAM,
-    BandwidthEstimator,
-    NetworkState,
-    Trace,
-    make_policy,
-    simulate,
+from repro.core import PolicySpec
+from repro.session import ScenarioSpec, Session, TraceSpec
+
+N_FRAMES = 240
+
+# WiFi-like square wave, 2 s period: points repeat far past the trace length.
+_SQUARE = TraceSpec(
+    kind="piecewise",
+    rtt_ms=100.0,
+    points=tuple(
+        (float(t), 3.5 if i % 2 == 0 else 0.8) for i, t in enumerate(range(0, 14, 2))
+    ),
 )
-from repro.core.simulator import Policy
 
 
-def _square_trace(period_s: float = 2.0, hi: float = 3.5, lo: float = 0.8) -> Trace:
-    return Trace(
-        lambda t: (hi if (t // period_s) % 2 == 0 else lo) * 1e6, lambda t: 0.100
+def _spec(policy: str) -> ScenarioSpec:
+    return ScenarioSpec(
+        policy=PolicySpec(policy), n_frames=N_FRAMES, trace=_SQUARE, label="adaptivity"
     )
-
-
-def _estimated_policy(name: str) -> Policy:
-    """Wrap a policy so it sees only the estimator's belief, updated from the
-    uploads the previous rounds actually performed."""
-    est = BandwidthEstimator(init_bps=2e6, beta=0.4, pessimism=0.9)
-    inner = make_policy(name)
-
-    def policy(models, stream, net, *, npu_free):
-        plan = inner(models, stream, est.state(), npu_free=npu_free)
-        # feedback: observe the true bandwidth through this round's uploads
-        for d in plan.decisions:
-            if d.is_processed() and d.resolution > 0 and d.where.value == "server":
-                nbytes = stream.frame_bytes(d.resolution)
-                est.observe_upload(nbytes, net.upload_time(nbytes))
-        return plan
-
-    return policy
 
 
 def adaptivity():
     rows = []
-    trace = _square_trace()
-    n = 240
     for name in ("max_accuracy", "local", "offload"):
-        st = simulate(make_policy(name), list(PAPER_MODELS), PAPER_STREAM, trace, n)
+        st = Session(_spec(name)).run_sim().stats
         rows.append((f"adapt/oracleB/{name}", st.schedule_time / max(st.schedule_calls, 1) * 1e6,
                      st.mean_accuracy))
-    st = simulate(_estimated_policy("max_accuracy"), list(PAPER_MODELS), PAPER_STREAM, trace, n)
+    st = Session(_spec("max_accuracy")).run_online().stats
     rows.append(("adapt/estimatedB/max_accuracy",
                  st.schedule_time / max(st.schedule_calls, 1) * 1e6, st.mean_accuracy))
     return rows

@@ -13,7 +13,8 @@ What the numbers show (acceptance criteria for the multi-tenant subsystem):
     under contention, so the edge-server policy beats it on aggregate
     accuracy for every N >= 2.
 
-Run directly for a human-readable table:
+Every cell is one declarative ``ScenarioSpec`` (policy + ``FleetSpec``) run
+through ``Session.run_multi``.  Run directly for a human-readable table:
 
     PYTHONPATH=src python benchmarks/multistream_bench.py
 """
@@ -24,7 +25,8 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-from repro.core import EdgeServerScheduler, Trace, make_fleet, simulate_multi  # noqa: E402
+from repro.core import PolicySpec  # noqa: E402
+from repro.session import FleetSpec, ScenarioSpec, Session, TraceSpec  # noqa: E402
 
 N_FRAMES = 60
 CLIENT_COUNTS = (1, 2, 4, 8)
@@ -33,29 +35,40 @@ BANDWIDTHS_MBPS = (6.0, 12.0)
 CAPACITY = 4
 
 
+def _run(mbps: float, allocation: str, n: int, *, capacity: int = CAPACITY,
+         priorities=None):
+    spec = ScenarioSpec(
+        policy=PolicySpec("max_accuracy"),
+        n_frames=N_FRAMES,
+        trace=TraceSpec(mbps=mbps),
+        fleet=FleetSpec(n_clients=n, allocation=allocation, capacity=capacity,
+                        priorities=priorities),
+        label=f"multistream/B{mbps}/{allocation}/n{n}",
+    )
+    return Session(spec).run_multi()
+
+
 def _cells(policies=POLICIES, bandwidths=BANDWIDTHS_MBPS, counts=CLIENT_COUNTS):
     for mbps in bandwidths:
         for pol in policies:
             for n in counts:
-                sched = EdgeServerScheduler(make_fleet(n), policy=pol, capacity=CAPACITY)
-                ms = simulate_multi(sched, Trace.constant(mbps), N_FRAMES)
-                yield mbps, pol, n, sched, ms
+                yield mbps, pol, n, _run(mbps, pol, n)
 
 
 def multistream_scaling():
     """Fleet accuracy + worst-client miss rate vs client count and policy."""
     rows = []
-    for mbps, pol, n, sched, ms in _cells():
-        us = sum(s.schedule_time for s in ms.per_client) / max(
-            sum(s.schedule_calls for s in ms.per_client), 1
+    for mbps, pol, n, rep in _cells():
+        us = sum(s.schedule_time for s in rep.streams) / max(
+            sum(s.schedule_calls for s in rep.streams), 1
         ) * 1e6
-        rows.append((f"multistream/B{mbps}/{pol}/n{n}/agg_acc", us, ms.aggregate_accuracy))
-        rows.append((f"multistream/B{mbps}/{pol}/n{n}/max_miss", 0.0, ms.max_miss_rate))
+        rows.append((f"multistream/B{mbps}/{pol}/n{n}/agg_acc", us, rep.aggregate_accuracy))
+        rows.append((f"multistream/B{mbps}/{pol}/n{n}/max_miss", 0.0, rep.max_miss_rate))
         rows.append(
             (
                 f"multistream/B{mbps}/{pol}/n{n}/edge_frames",
                 0.0,
-                float(sum(s.frames_offloaded for s in ms.per_client)),
+                float(sum(s.frames_offloaded for s in rep.streams)),
             )
         )
     return rows
@@ -64,20 +77,18 @@ def multistream_scaling():
 def multistream_priority():
     """Two priority classes, one server slot: high class keeps the edge."""
     rows = []
-    fleet = make_fleet(4, priorities=[0, 0, 2, 2])
-    sched = EdgeServerScheduler(fleet, policy="priority", capacity=1)
-    ms = simulate_multi(sched, Trace.constant(12.0), N_FRAMES)
-    for c, s in zip(fleet, ms.per_client):
+    priorities = (0, 0, 2, 2)
+    rep = _run(12.0, "priority", 4, capacity=1, priorities=priorities)
+    for cid, (p, s) in enumerate(zip(priorities, rep.streams)):
         rows.append(
             (
-                f"multistream/priority/p{c.priority}/c{c.client_id}/acc",
+                f"multistream/priority/p{p}/c{cid}/acc",
                 0.0,
                 s.accuracy_sum / max(s.frames_total, 1),
             )
         )
         rows.append(
-            (f"multistream/priority/p{c.priority}/c{c.client_id}/edge_frames", 0.0,
-             float(s.frames_offloaded))
+            (f"multistream/priority/p{p}/c{cid}/edge_frames", 0.0, float(s.frames_offloaded))
         )
     return rows
 
@@ -91,12 +102,12 @@ def main() -> int:
           f"{'edge frames':>12} {'srv util':>9}")
     ok_bounded = True
     acc: dict[tuple[float, str, int], float] = {}
-    for mbps, pol, n, sched, ms in _cells(policies=("weighted_fair", "fifo")):
-        edge = sum(s.frames_offloaded for s in ms.per_client)
-        print(f"{mbps:8.1f} {pol:>14} {n:3d} {ms.aggregate_accuracy:8.3f} "
-              f"{ms.max_miss_rate:9.2f} {edge:12d} {ms.server_utilization:9.2f}")
-        acc[(mbps, pol, n)] = ms.aggregate_accuracy
-        if pol == "weighted_fair" and ms.max_miss_rate > 0.10:
+    for mbps, pol, n, rep in _cells(policies=("weighted_fair", "fifo")):
+        edge = sum(s.frames_offloaded for s in rep.streams)
+        print(f"{mbps:8.1f} {pol:>14} {n:3d} {rep.aggregate_accuracy:8.3f} "
+              f"{rep.max_miss_rate:9.2f} {edge:12d} {rep.meta['server_utilization']:9.2f}")
+        acc[(mbps, pol, n)] = rep.aggregate_accuracy
+        if pol == "weighted_fair" and rep.max_miss_rate > 0.10:
             ok_bounded = False
     ok_beats_fifo = all(
         acc[(mbps, "weighted_fair", n)] >= acc[(mbps, "fifo", n)] - 1e-9

@@ -4,24 +4,40 @@ constants (Table II profiles, 200 ms deadline, 5 resolutions, 100 ms delay).
 Each function returns a list of (name, us_per_call, derived) rows where
 ``derived`` is the figure's y-value and ``us_per_call`` is the mean wall time
 of one policy round (the schedule-decision cost the paper reports < 1 ms).
+
+Every cell goes through the declarative front door: a ``ScenarioSpec`` built
+from (policy name, params, bandwidth, fps, rtt) and run by ``Session`` — so
+sweeping a new policy (including the ``brute_force`` oracle and the jitted
+``jax_*`` DPs) is just another name in a tuple.
 """
 from __future__ import annotations
 
 import time
 
-from repro.core import (
-    PAPER_MODELS,
-    PAPER_STREAM,
-    StreamSpec,
-    Trace,
-    brute_force,
-    make_policy,
-    network_mbps,
-    simulate,
-)
+from repro.core import PAPER_MODELS, PAPER_STREAM, PolicySpec, StreamSpec, brute_force, network_mbps
+from repro.session import ScenarioSpec, Session, TraceSpec
 
 N_FRAMES = 120
 POLICIES = ("max_accuracy", "local", "offload", "deepdecision")
+
+
+def _sim(
+    policy: str,
+    mbps: float,
+    *,
+    params: dict | None = None,
+    fps: float | None = None,
+    rtt_ms: float = 100.0,
+    n_frames: int = N_FRAMES,
+):
+    """One front-door cell: build the spec, run the audited simulator."""
+    spec = ScenarioSpec(
+        policy=PolicySpec(policy, params or {}),
+        n_frames=n_frames,
+        stream=PAPER_STREAM if fps is None else StreamSpec(fps=fps),
+        trace=TraceSpec(mbps=mbps, rtt_ms=rtt_ms),
+    )
+    return Session(spec).run_sim().stats
 
 
 def _row(name: str, stats, derived: float):
@@ -51,8 +67,7 @@ def fig5_bandwidth_accuracy():
     rows = []
     for mbps in (0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5):
         for pol in POLICIES:
-            st = simulate(make_policy(pol), list(PAPER_MODELS), PAPER_STREAM,
-                          Trace.constant(mbps), N_FRAMES)
+            st = _sim(pol, mbps)
             rows.append(_row(f"fig5/B{mbps}/{pol}", st, st.mean_accuracy))
     return rows
 
@@ -60,10 +75,8 @@ def fig5_bandwidth_accuracy():
 def fig6_framerate_accuracy():
     rows = []
     for fps in (10, 20, 30, 40, 50):
-        stream = StreamSpec(fps=fps)
         for pol in POLICIES:
-            st = simulate(make_policy(pol), list(PAPER_MODELS), stream,
-                          Trace.constant(3.0), N_FRAMES)
+            st = _sim(pol, 3.0, fps=fps)
             rows.append(_row(f"fig6/fps{fps}/{pol}", st, st.mean_accuracy))
     return rows
 
@@ -73,14 +86,12 @@ def fig7_optimal_gap():
     rows = []
     for mbps in (1.0, 2.0, 3.0):
         for fps in (20, 30, 40):
-            stream = StreamSpec(fps=fps)
             t0 = time.perf_counter()
             opt = brute_force.optimal_accuracy(
-                list(PAPER_MODELS), stream, network_mbps(mbps), 40, grid=2e-3
+                list(PAPER_MODELS), StreamSpec(fps=fps), network_mbps(mbps), 40, grid=2e-3
             )
             dt = (time.perf_counter() - t0) * 1e6
-            st = simulate(make_policy("max_accuracy"), list(PAPER_MODELS), stream,
-                          Trace.constant(mbps), 40)
+            st = _sim("max_accuracy", mbps, fps=fps, n_frames=40)
             rows.append((f"fig7/B{mbps}_fps{fps}/gap", dt, max(opt - st.mean_accuracy, 0.0)))
     return rows
 
@@ -89,10 +100,8 @@ def fig8_delay_accuracy():
     rows = []
     for rtt_ms in (50, 100, 150, 200):
         for fps in (30, 50):
-            stream = StreamSpec(fps=fps)
             for pol in POLICIES:
-                st = simulate(make_policy(pol), list(PAPER_MODELS), stream,
-                              Trace.constant(3.0, rtt_ms=rtt_ms), N_FRAMES)
+                st = _sim(pol, 3.0, fps=fps, rtt_ms=rtt_ms)
                 rows.append(_row(f"fig8/d{rtt_ms}_fps{fps}/{pol}", st, st.mean_accuracy))
     return rows
 
@@ -102,8 +111,7 @@ def fig9_bandwidth_utility():
     for alpha in (200.0, 50.0):
         for mbps in (0.5, 1.5, 2.5, 3.5):
             for pol in ("max_utility", "local", "offload", "deepdecision"):
-                st = simulate(make_policy(pol, alpha=alpha), list(PAPER_MODELS),
-                              PAPER_STREAM, Trace.constant(mbps), N_FRAMES)
+                st = _sim(pol, mbps, params={"alpha": alpha})
                 rows.append(_row(f"fig9/a{alpha:.0f}_B{mbps}/{pol}", st, st.utility(alpha)))
     return rows
 
@@ -112,10 +120,8 @@ def fig10_framerate_utility():
     rows = []
     for alpha in (200.0, 50.0):
         for fps in (10, 30, 50):
-            stream = StreamSpec(fps=fps)
             for pol in ("max_utility", "local", "offload"):
-                st = simulate(make_policy(pol, alpha=alpha), list(PAPER_MODELS),
-                              stream, Trace.constant(2.5), N_FRAMES)
+                st = _sim(pol, 2.5, fps=fps, params={"alpha": alpha})
                 rows.append(_row(f"fig10/a{alpha:.0f}_fps{fps}/{pol}", st, st.utility(alpha)))
     return rows
 
@@ -125,9 +131,25 @@ def fig11_delay_utility():
     for alpha in (200.0, 50.0):
         for rtt_ms in (50, 100, 150):
             for pol in ("max_utility", "local", "offload"):
-                st = simulate(make_policy(pol, alpha=alpha), list(PAPER_MODELS),
-                              PAPER_STREAM, Trace.constant(2.0, rtt_ms=rtt_ms), N_FRAMES)
+                st = _sim(pol, 2.0, rtt_ms=rtt_ms, params={"alpha": alpha})
                 rows.append(_row(f"fig11/a{alpha:.0f}_d{rtt_ms}/{pol}", st, st.utility(alpha)))
+    return rows
+
+
+def oracle_gap_sweep():
+    """Beyond-paper: the oracle and the jitted DPs as *policies*, swept
+    uniformly with the heuristics through the registry front door.
+    derived = mean accuracy (or utility); the oracle upper-bounds each cell
+    up to its time grid (default 5 ms — tighten ``grid`` to close the gap)."""
+    rows = []
+    for mbps in (1.0, 2.5):
+        for pol in ("max_accuracy", "brute_force", "jax_accuracy", "local"):
+            st = _sim(pol, mbps, n_frames=60)
+            rows.append(_row(f"oracle/B{mbps}/{pol}", st, st.mean_accuracy))
+    alpha = 200.0
+    for pol in ("max_utility", "brute_force", "jax_utility"):
+        st = _sim(pol, 2.5, params={"alpha": alpha}, n_frames=60)
+        rows.append(_row(f"oracle/a{alpha:.0f}_B2.5/{pol}", st, st.utility(alpha)))
     return rows
 
 
@@ -169,5 +191,6 @@ ALL = [
     fig9_bandwidth_utility,
     fig10_framerate_utility,
     fig11_delay_utility,
+    oracle_gap_sweep,
     sched_latency,
 ]

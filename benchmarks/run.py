@@ -1,22 +1,34 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+#
+# Benchmark groups are auto-discovered: every ``benchmarks/*_bench.py`` or
+# ``benchmarks/*_figures.py`` module exposing an ``ALL`` list of zero-arg
+# row-producers is swept — drop a new module in this directory and it runs,
+# no import-list edit needed.
+import importlib
 import sys
 from pathlib import Path
 
-sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+BENCH_DIR = Path(__file__).resolve().parent
+sys.path.insert(0, str(BENCH_DIR.parent / "src"))
+sys.path.insert(0, str(BENCH_DIR.parent))
+
+
+def discover_groups() -> list[tuple[str, list]]:
+    """(module_name, ALL) for every benchmark module in this directory."""
+    groups = []
+    for path in sorted(BENCH_DIR.glob("*.py")):
+        if path.name.startswith("_") or path.stem in ("run", "make_experiments_tables"):
+            continue
+        mod = importlib.import_module(f"benchmarks.{path.stem}")
+        all_ = getattr(mod, "ALL", None)
+        if all_:
+            groups.append((path.stem, list(all_)))
+    return groups
 
 
 def main() -> None:
-    from benchmarks import (
-        adaptivity_bench,
-        kernels_bench,
-        multistream_bench,
-        paper_figures,
-        roofline_bench,
-    )
-
     print("name,us_per_call,derived")
-    for group in (paper_figures.ALL, adaptivity_bench.ALL, kernels_bench.ALL,
-                  roofline_bench.ALL, multistream_bench.ALL):
+    for _name, group in discover_groups():
         for bench in group:
             for name, us, derived in bench():
                 print(f"{name},{us:.2f},{derived:.6f}", flush=True)

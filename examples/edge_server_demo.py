@@ -22,34 +22,37 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 import numpy as np  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
-from repro.core import (  # noqa: E402
-    EdgeServerScheduler,
-    Trace,
-    make_fleet,
-    simulate_multi,
-)
+from repro.core import PolicySpec  # noqa: E402
 from repro.serving import (  # noqa: E402
     BatchedEndpoint,
     EdgeBatchServer,
     OffloadRequest,
     make_synthetic_video,
 )
+from repro.session import FleetSpec, ScenarioSpec, Session, TraceSpec  # noqa: E402
 
 N_CLIENTS = 4
 N_FRAMES = 60
 
 # --- Part 1: contention on the shared uplink --------------------------------
 print(f"== {N_CLIENTS} clients, 12 Mbps shared uplink, 4 server slots ==")
-for policy in ("weighted_fair", "priority", "fifo"):
-    fleet = make_fleet(N_CLIENTS, priorities=[0, 0, 1, 1])
-    sched = EdgeServerScheduler(fleet, policy=policy, capacity=4)
-    ms = simulate_multi(sched, Trace.constant(12.0), N_FRAMES)
+for allocation in ("weighted_fair", "priority", "fifo"):
+    spec = ScenarioSpec(
+        policy=PolicySpec("max_accuracy"),
+        n_frames=N_FRAMES,
+        trace=TraceSpec(mbps=12.0),
+        fleet=FleetSpec(
+            n_clients=N_CLIENTS, allocation=allocation, capacity=4, priorities=(0, 0, 1, 1)
+        ),
+        label=f"edge_server_demo/{allocation}",
+    )
+    rep = Session(spec).run_multi()
     per = " ".join(
         f"c{i}:acc={s.accuracy_sum / s.frames_total:.2f},edge={s.frames_offloaded}"
-        for i, s in enumerate(ms.per_client)
+        for i, s in enumerate(rep.streams)
     )
-    print(f"{policy:14s} agg_acc={ms.aggregate_accuracy:.3f} "
-          f"max_miss={ms.max_miss_rate:.2f}  {per}")
+    print(f"{allocation:14s} agg_acc={rep.aggregate_accuracy:.3f} "
+          f"max_miss={rep.max_miss_rate:.2f}  {per}")
 
 # --- Part 2: batched serving of the offloaded frames ------------------------
 print("\n== batched edge endpoint: one forward per model per tick ==")

@@ -1,5 +1,7 @@
 """Reproduce Fig. 5/9 interactively: sweep bandwidth and compare policies on
-accuracy and utility — the paper's core result in one script.
+accuracy and utility — the paper's core result in one script.  Each cell is a
+declarative ScenarioSpec run through the Session front door, so adding a
+policy to the sweep is just another registry name.
 
     PYTHONPATH=src python examples/offload_policy_sweep.py
 """
@@ -8,24 +10,29 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-from repro.core import PAPER_MODELS, PAPER_STREAM, Trace, make_policy, simulate  # noqa: E402
+from repro.core import PolicySpec  # noqa: E402
+from repro.session import ScenarioSpec, Session, TraceSpec  # noqa: E402
 
 BANDS = (0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5)
+
+
+def run(policy: str, mbps: float, params: dict | None = None):
+    spec = ScenarioSpec(
+        policy=PolicySpec(policy, params or {}), n_frames=120, trace=TraceSpec(mbps=mbps)
+    )
+    return Session(spec).run_sim().stats
+
 
 print("Fig.5 (accuracy):  B_Mbps  max_accuracy  local  offload  deepdecision")
 for mbps in BANDS:
     row = [f"{mbps:18.1f}"]
     for pol in ("max_accuracy", "local", "offload", "deepdecision"):
-        st = simulate(make_policy(pol), list(PAPER_MODELS), PAPER_STREAM,
-                      Trace.constant(mbps), 120)
-        row.append(f"{st.mean_accuracy:12.3f}")
+        row.append(f"{run(pol, mbps).mean_accuracy:12.3f}")
     print(" ".join(row))
 
 print("\nFig.9 (utility, alpha=200):")
 for mbps in BANDS:
     row = [f"{mbps:18.1f}"]
     for pol in ("max_utility", "local", "offload"):
-        st = simulate(make_policy(pol, alpha=200.0), list(PAPER_MODELS), PAPER_STREAM,
-                      Trace.constant(mbps), 120)
-        row.append(f"{st.utility(200.0):12.1f}")
+        row.append(f"{run(pol, mbps, {'alpha': 200.0}).utility(200.0):12.1f}")
     print(" ".join(row))

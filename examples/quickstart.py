@@ -1,8 +1,8 @@
 """Quickstart: the FastVA scheduler in 30 lines.
 
 Plans one round of video-frame scheduling with the paper's Table II profiles,
-then replays 90 frames through the audited simulator and prints what each
-policy achieves.
+then replays 90 frames through the audited simulator — every policy built by
+name from the registry, every run described by one declarative ScenarioSpec.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,27 +11,27 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-from repro.core import (  # noqa: E402
-    PAPER_MODELS,
-    PAPER_STREAM,
-    Trace,
-    make_policy,
-    network_mbps,
-    simulate,
-)
-from repro.core.max_accuracy import plan_round  # noqa: E402
+from repro.core import PAPER_MODELS, PAPER_STREAM, PolicySpec, network_mbps  # noqa: E402
+from repro.core.registry import get_policy  # noqa: E402
+from repro.session import ScenarioSpec, Session, TraceSpec  # noqa: E402
 
 net = network_mbps(2.5, rtt_ms=100)
-plan = plan_round(list(PAPER_MODELS), PAPER_STREAM, net)
+plan = PolicySpec("max_accuracy").build()(list(PAPER_MODELS), PAPER_STREAM, net, npu_free=0.0)
 print("One Max-Accuracy round @2.5 Mbps (frame, where, model, resolution):")
 for d in plan.decisions:
     print(f"  frame {d.frame}: {d.where.value:6s} model={d.model} r={d.resolution} "
           f"finish={d.finish*1e3:.0f} ms")
 
 print("\n90-frame replay, mean accuracy per policy:")
-for policy in ("max_accuracy", "local", "offload", "deepdecision"):
-    stats = simulate(make_policy(policy), list(PAPER_MODELS), PAPER_STREAM,
-                     Trace.constant(2.5), 90)
+for policy in ("max_accuracy", "local", "offload", "deepdecision", "brute_force"):
+    spec = ScenarioSpec(policy=PolicySpec(policy), n_frames=90, trace=TraceSpec(mbps=2.5))
+    stats = Session(spec).run_sim().stats
     print(f"  {policy:14s} acc={stats.mean_accuracy:.3f} "
           f"processed={stats.frames_processed}/90 "
           f"sched={stats.schedule_time/max(stats.schedule_calls,1)*1e6:.0f} us/round")
+
+print("\nRegistered policies (see docs/api.md):")
+for name in ("max_accuracy", "max_utility"):
+    entry = get_policy(name)
+    params = ", ".join(p.name + ("" if p.required else "?") for p in entry.params) or "-"
+    print(f"  {name:14s} params: {params}")

@@ -6,13 +6,13 @@ launch/, tests/, and benchmarks/ consume only this API.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from .models import convnets, diffusion, lm, vision
-from .models.common import ParamSpec, abstract_tree, init_tree, param_count, spec
+from .models.common import ParamSpec, param_count, spec
 
 
 @dataclasses.dataclass(frozen=True)

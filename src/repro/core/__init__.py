@@ -4,15 +4,19 @@ accurate/network-bound edge path.
 
 Public surface:
   profiles    ModelProfile / StreamSpec / NetworkState / paper Table II presets
+  registry    PolicySpec / register_policy — every policy, by name (front door)
   max_accuracy.plan_round     — §IV Algorithm 1
   max_utility.plan_round      — §V Algorithm 2
   baselines                   — Offload / Local / DeepDecision (§VI.C)
-  brute_force                 — Optimal oracle (exhaustive + grid DP)
+  brute_force                 — Optimal oracle (exhaustive + grid DP + policy)
   simulator.simulate          — audited stream replay
   simulator.simulate_multi    — N streams, shared fluid uplink + server queue
   edge_server                 — multi-tenant admission/bandwidth scheduler
   jax_sched                   — jitted lax implementations of both DPs
   controller.OnlineController — streaming controller w/ bandwidth estimation
+
+Declarative scenario running (ScenarioSpec/Session) lives one level up in
+``repro.session``.
 """
 from . import (  # noqa: F401
     baselines,
@@ -23,10 +27,18 @@ from . import (  # noqa: F401
     max_accuracy,
     max_utility,
     profiles,
+    registry,
     schedule,
     simulator,
 )
 from .controller import BandwidthEstimator, OnlineController  # noqa: F401
+from .registry import (  # noqa: F401
+    Param,
+    PolicySpec,
+    available_policies,
+    get_policy,
+    register_policy,
+)
 from .edge_server import EdgeClient, EdgeServerScheduler, make_fleet  # noqa: F401
 from .profiles import (  # noqa: F401
     PAPER_MODELS,

@@ -10,12 +10,21 @@ from typing import Sequence
 
 import numpy as np
 
-from .max_accuracy import local_dp
 from .max_utility import local_utility_dp
 from .profiles import ModelProfile, NetworkState, StreamSpec, best_server_model
+from .registry import Param, register_policy
 from .schedule import Decision, RoundPlan, Where
 
+# alpha is the shared mode switch of every baseline: None = accuracy mode
+# (paper Fig. 5-8), a float = utility mode with that weight (paper Fig. 9-11).
+_ALPHA = Param.number("alpha", None, nullable=True, doc="None = accuracy mode; float = utility weight")
 
+
+@register_policy(
+    "offload",
+    params=(_ALPHA,),
+    doc="§VI.C Offload baseline: always ship to the edge, resize to keep up.",
+)
 def offload_plan_round(
     models: Sequence[ModelProfile],
     stream: StreamSpec,
@@ -56,6 +65,14 @@ def offload_plan_round(
     )
 
 
+@register_policy(
+    "local",
+    params=(
+        _ALPHA,
+        Param.integer("window_frames", None, nullable=True, doc="DP window; default floor(T/gamma)"),
+    ),
+    doc="§VI.C Local baseline: NPU-only schedule via the paper's DP.",
+)
 def local_plan_round(
     models: Sequence[ModelProfile],
     stream: StreamSpec,
@@ -107,6 +124,11 @@ def local_plan_round(
     )
 
 
+@register_policy(
+    "deepdecision",
+    params=(_ALPHA, Param.number("window_s", 1.0, doc="fixed decision window (s)")),
+    doc="§VI.C DeepDecision baseline: one (place, model, resolution) per window.",
+)
 def deepdecision_plan_round(
     models: Sequence[ModelProfile],
     stream: StreamSpec,

@@ -22,6 +22,8 @@ from typing import Sequence
 import numpy as np
 
 from .profiles import ModelProfile, NetworkState, StreamSpec
+from .registry import Param, register_policy
+from .schedule import Decision, RoundPlan, Where
 
 NEG = -1e18
 
@@ -210,3 +212,181 @@ def optimal_utility(
             continue
         best = max(best, m / elapsed + alpha * s / m)
     return best
+
+
+# ---------------------------------------------------------------------------
+# Oracle as a *policy*: a windowed grid DP with path recovery, so the oracle
+# can be swept through the registry / Session front door like any heuristic.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class _PlanAction:
+    """An action with identity (model, resolution), unlike :class:`Action`."""
+
+    kind: str  # "npu" | "net"
+    model: int
+    resolution: int
+    dur: float  # serial occupancy of the resource (t_npu or t_up), seconds
+    tail: float  # post-occupancy latency: 0 for npu, rtt + t_server for net
+    acc: float
+
+
+def _window_actions(
+    models: Sequence[ModelProfile], stream: StreamSpec, net: NetworkState
+) -> list[_PlanAction]:
+    T = stream.deadline
+    acts: list[_PlanAction] = []
+    for j, m in enumerate(models):
+        if m.runs_local and m.t_npu <= T:
+            acts.append(
+                _PlanAction("npu", j, stream.r_max, m.t_npu, 0.0,
+                            m.accuracy(stream.r_max, where="npu"))
+            )
+    for r in stream.resolutions:
+        t_up = net.upload_time(stream.frame_bytes(r))
+        for j, m in enumerate(models):
+            if not m.runs_server or T - t_up - net.rtt - m.t_server < 0:
+                continue
+            acts.append(
+                _PlanAction("net", j, r, t_up, net.rtt + m.t_server,
+                            m.accuracy(r, where="server"))
+            )
+    return acts
+
+
+@register_policy(
+    "brute_force",
+    params=(
+        Param.number("alpha", None, nullable=True, doc="None = accuracy mode; float = utility weight"),
+        Param.integer("window_frames", None, nullable=True, doc="DP window; default floor(T/gamma)"),
+        Param.number("grid", 5e-3, doc="DP time grid (s); finer = closer to the true optimum"),
+    ),
+    doc="§VI.C Optimal oracle as a policy: windowed joint-resource grid DP.",
+)
+def plan_round(
+    models: Sequence[ModelProfile],
+    stream: StreamSpec,
+    net: NetworkState,
+    *,
+    npu_free: float = 0.0,
+    alpha: float | None = None,
+    window_frames: int | None = None,
+    grid: float = 5e-3,
+) -> RoundPlan:
+    """One oracle round: grid-optimal (skip | npu | offload) per window frame.
+
+    Same discretization contract as :func:`optimal_accuracy` — durations are
+    ceil'd to the grid and budgets floor'd, so any extracted schedule is
+    feasible in continuous time; Decision timestamps are recomputed exactly
+    during extraction.  State is (frame, npu-free offset, link-free offset)
+    with per-count accuracy vectors so one DP serves both objectives.
+    """
+    gamma, T = stream.gamma, stream.deadline
+    n = window_frames if window_frames is not None else max(int(np.floor(T / gamma)), 1)
+    acts = _window_actions(models, stream, net)
+    if not acts:
+        return RoundPlan(decisions=[Decision(0, Where.SKIP)], horizon=1, npu_busy_until=npu_free)
+
+    nb = int(np.floor(T / grid)) + 1
+    kdec = int(np.floor(gamma / grid))
+    table = []  # (action, dur_bins, latest-start bin)
+    for a in acts:
+        d = max(int(np.ceil(a.dur / grid - 1e-12)), 0)
+        bmax = int(np.floor((T - a.dur - a.tail + 1e-12) / grid))
+        table.append((a, d, min(bmax, nb - 1)))
+
+    memo: dict[tuple[int, int, int], tuple[np.ndarray, list[int]]] = {}
+
+    def dec(b: int) -> int:
+        return max(b - kdec, 0)
+
+    def solve(k: int, bn: int, bl: int) -> tuple[np.ndarray, list[int]]:
+        """vals[m] = best accuracy sum processing exactly m of frames k..n-1;
+        choice[m] = action index taken at frame k on that path (-1 = skip)."""
+        if k == n:
+            base = np.full(1, 0.0)
+            return base, []
+        key = (k, bn, bl)
+        hit = memo.get(key)
+        if hit is not None:
+            return hit
+        rem = n - k
+        vals = np.full(rem + 1, NEG)
+        choice = [-1] * (rem + 1)
+        sub, _ = solve(k + 1, dec(bn), dec(bl))
+        vals[: len(sub)] = sub  # skip frame k
+        for ai, (a, d, bmax) in enumerate(table):
+            b = bn if a.kind == "npu" else bl
+            if b > bmax:
+                continue
+            tgt = min(b + d, nb - 1)
+            nbn, nbl = (tgt, bl) if a.kind == "npu" else (bn, tgt)
+            sub, _ = solve(k + 1, dec(nbn), dec(nbl))
+            for m in range(1, len(sub) + 1):
+                if sub[m - 1] <= NEG / 2:
+                    continue
+                v = sub[m - 1] + a.acc
+                if v > vals[m]:
+                    vals[m] = v
+                    choice[m] = ai
+        memo[key] = (vals, choice)
+        return vals, choice
+
+    bn0 = min(max(int(np.ceil(max(npu_free, 0.0) / grid - 1e-12)), 0), nb - 1)
+    vals, _ = solve(0, bn0, 0)
+    window = n * gamma
+    if alpha is None:
+        m_star = int(np.argmax(vals))
+    else:
+        m_star, best_u = 0, 0.0
+        for m in range(1, len(vals)):
+            if vals[m] <= NEG / 2:
+                continue
+            u = m / window + alpha * vals[m] / m
+            if u > best_u:
+                m_star, best_u = m, u
+
+    # Walk the chosen path, recomputing exact continuous-time stamps.
+    decisions: list[Decision] = []
+    bn, bl, m_left = bn0, 0, m_star
+    npu_t, net_t = max(npu_free, 0.0), 0.0
+    acc_sum, processed = 0.0, 0
+    for k in range(n):
+        arrival = k * gamma
+        _, choice = solve(k, bn, bl)
+        ai = choice[m_left] if m_left < len(choice) else -1
+        if ai < 0:
+            decisions.append(Decision(k, Where.SKIP))
+            bn, bl = dec(bn), dec(bl)
+            continue
+        a, d, _ = table[ai]
+        if a.kind == "npu":
+            start = max(npu_t, arrival)
+            finish = start + a.dur
+            npu_t = finish
+            where = Where.NPU
+            tgt = min(bn + d, nb - 1)
+            bn, bl = dec(tgt), dec(bl)
+        else:
+            start = max(net_t, arrival)
+            finish = start + a.dur + a.tail
+            net_t = start + a.dur
+            where = Where.SERVER
+            tgt = min(bl + d, nb - 1)
+            bn, bl = dec(bn), dec(tgt)
+        decisions.append(
+            Decision(k, where, a.model, a.resolution, start=start, finish=finish)
+        )
+        acc_sum += a.acc
+        processed += 1
+        m_left -= 1
+    utility = processed / window + (alpha * acc_sum / processed if processed else 0.0) if alpha is not None else 0.0
+    return RoundPlan(
+        decisions=decisions,
+        horizon=n,
+        expected_accuracy_sum=acc_sum,
+        expected_utility=utility,
+        npu_busy_until=npu_t,
+        net_busy_until=net_t,
+    )

@@ -12,8 +12,9 @@ from dataclasses import dataclass, field
 from typing import Sequence
 
 from .profiles import ModelProfile, NetworkState, StreamSpec
+from .registry import PolicySpec
 from .schedule import RoundPlan
-from .simulator import Policy, make_policy
+from .simulator import Policy
 
 
 @dataclass
@@ -50,19 +51,28 @@ class BandwidthEstimator:
 
 @dataclass
 class OnlineController:
-    """Drives a policy over a live stream with estimated network state."""
+    """Drives a policy over a live stream with estimated network state.
+
+    The policy is a registry :class:`PolicySpec` (or a bare name).  The
+    legacy ``policy_name``/``alpha`` pair is still accepted when ``policy``
+    is left unset, and is folded into a spec — so the controller itself is
+    serializable as part of a ``ScenarioSpec``.
+    """
 
     models: Sequence[ModelProfile]
     stream: StreamSpec
-    policy_name: str = "max_accuracy"
-    alpha: float | None = None
+    policy: PolicySpec | str | None = None
+    policy_name: str = "max_accuracy"  # legacy; used only when policy is None
+    alpha: float | None = None  # legacy; used only when policy is None
     estimator: BandwidthEstimator = field(default_factory=BandwidthEstimator)
     _policy: Policy = field(init=False)
     npu_busy_abs: float = field(default=0.0, init=False)
     rounds: int = field(default=0, init=False)
 
     def __post_init__(self) -> None:
-        self._policy = make_policy(self.policy_name, alpha=self.alpha)
+        self.policy = PolicySpec.coerce(self.policy, policy_name=self.policy_name, alpha=self.alpha)
+        self.policy_name = self.policy.name
+        self._policy = self.policy.build()
 
     def next_plan(self, head_frame: int) -> RoundPlan:
         t0 = head_frame * self.stream.gamma

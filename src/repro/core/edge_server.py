@@ -33,10 +33,11 @@ server queue are accounted for — lives in ``simulator.simulate_multi``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Sequence
 
 from .profiles import ModelProfile, NetworkState, StreamSpec
+from .registry import PolicySpec
 
 ALLOCATION_POLICIES = ("weighted_fair", "priority", "fifo")
 
@@ -46,9 +47,10 @@ class EdgeClient:
     """One tenant stream: a phone running the FastVA controller.
 
     ``weight`` steers weighted-fair bandwidth shares; ``priority`` (higher =
-    more important) steers the ``priority`` policy.  ``policy_name``/``alpha``
-    pick the *inner* per-stream solver (max_accuracy / max_utility / any name
-    ``simulator.make_policy`` knows).
+    more important) steers the ``priority`` policy.  ``policy`` picks the
+    *inner* per-stream solver as a registry :class:`PolicySpec` (or a bare
+    registered name); the legacy ``policy_name``/``alpha`` pair is still
+    accepted when ``policy`` is left unset.
     """
 
     client_id: int
@@ -56,13 +58,14 @@ class EdgeClient:
     models: Sequence[ModelProfile]
     weight: float = 1.0
     priority: int = 0
-    policy_name: str = "max_accuracy"
-    alpha: float | None = None
+    policy: PolicySpec | str | None = None
+    policy_name: str = "max_accuracy"  # legacy; used only when policy is None
+    alpha: float | None = None  # legacy; used only when policy is None
 
     def __post_init__(self) -> None:
-        from .simulator import make_policy  # local import: simulator imports us
-
-        self._policy = make_policy(self.policy_name, alpha=self.alpha)
+        self.policy = PolicySpec.coerce(self.policy, policy_name=self.policy_name, alpha=self.alpha)
+        self.policy_name = self.policy.name
+        self._policy = self.policy.build()
 
     def plan(self, net: NetworkState, *, npu_free: float):
         """One inner-solver round against this client's allocated bandwidth."""
@@ -259,6 +262,7 @@ def make_fleet(
     *,
     stream: StreamSpec | None = None,
     models: Sequence[ModelProfile] | None = None,
+    policy: PolicySpec | str | None = None,
     policy_name: str = "max_accuracy",
     alpha: float | None = None,
     weights: Sequence[float] | None = None,
@@ -269,6 +273,8 @@ def make_fleet(
 
     stream = stream if stream is not None else PAPER_STREAM
     models = list(models) if models is not None else list(PAPER_MODELS)
+    # One coercion up front so all N clients share a single validated spec.
+    policy = PolicySpec.coerce(policy, policy_name=policy_name, alpha=alpha)
     return [
         EdgeClient(
             client_id=i,
@@ -276,8 +282,7 @@ def make_fleet(
             models=models,
             weight=weights[i] if weights is not None else 1.0,
             priority=priorities[i] if priorities is not None else 0,
-            policy_name=policy_name,
-            alpha=alpha,
+            policy=policy,
         )
         for i in range(n)
     ]

@@ -20,7 +20,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .profiles import ModelProfile
+from .profiles import ModelProfile, NetworkState, StreamSpec
+from .registry import Param, register_policy
+from .schedule import Decision, RoundPlan, Where
 
 NEG = -1e18
 
@@ -261,3 +263,92 @@ def local_utility_dp_jax(
             break
     decisions.reverse()
     return best_u, decisions
+
+
+# ---------------------------------------------------------------------------
+# The jitted DPs as registered policies: local-only rounds planned on device.
+# ---------------------------------------------------------------------------
+
+
+@register_policy(
+    "jax_accuracy",
+    params=(
+        Param.integer("window_frames", None, nullable=True, doc="DP window; default floor(T/gamma)"),
+        Param.number("grid", 1e-3, doc="DP time grid (s)"),
+    ),
+    doc="Jitted Max-Accuracy local DP (every window frame on the NPU).",
+)
+def plan_round_accuracy(
+    models: Sequence[ModelProfile],
+    stream: StreamSpec,
+    net: NetworkState,
+    *,
+    npu_free: float = 0.0,
+    window_frames: int | None = None,
+    grid: float = 1e-3,
+) -> RoundPlan:
+    """Local-only round via :func:`local_accuracy_dp_jax` — the on-device
+    counterpart of the ``local`` baseline's accuracy mode (all frames
+    processed; a best-effort skip of the whole window when infeasible)."""
+    gamma, T = stream.gamma, stream.deadline
+    n = window_frames if window_frames is not None else max(int(np.floor(T / gamma)), 1)
+    total, picks = local_accuracy_dp_jax(
+        models, n_frames=n, gamma=gamma, deadline=T,
+        npu_free=npu_free, first_arrival=0.0, grid=grid,
+    )
+    if total <= NEG / 2:
+        return RoundPlan(decisions=[Decision(0, Where.SKIP)], horizon=1, npu_busy_until=npu_free)
+    decisions = []
+    free = max(npu_free, 0.0)
+    acc_sum = 0.0
+    for k, j in enumerate(picks):
+        start = max(free, k * gamma)
+        free = start + models[j].t_npu
+        decisions.append(Decision(k, Where.NPU, j, stream.r_max, start=start, finish=free))
+        acc_sum += models[j].accuracy(stream.r_max, where="npu")
+    return RoundPlan(
+        decisions=decisions, horizon=n, expected_accuracy_sum=acc_sum, npu_busy_until=free
+    )
+
+
+@register_policy(
+    "jax_utility",
+    params=(
+        Param.number("alpha", doc="paper Eq. (9) accuracy weight (required)"),
+        Param.integer("window_frames", None, nullable=True, doc="DP window; default floor(T/gamma)"),
+        Param.integer("width", 64, doc="Pareto-front width of the jitted DP"),
+    ),
+    doc="Jitted Max-Utility local DP (dominance-pruned front, skips allowed).",
+)
+def plan_round_utility(
+    models: Sequence[ModelProfile],
+    stream: StreamSpec,
+    net: NetworkState,
+    *,
+    alpha: float,
+    npu_free: float = 0.0,
+    window_frames: int | None = None,
+    width: int = 64,
+) -> RoundPlan:
+    """Local-only round via :func:`local_utility_dp_jax` — the on-device
+    counterpart of the ``local`` baseline's utility mode."""
+    gamma, T = stream.gamma, stream.deadline
+    n = window_frames if window_frames is not None else max(int(np.floor(T / gamma)), 1)
+    utility, picks = local_utility_dp_jax(
+        models, n_frames=n, gamma=gamma, deadline=T, alpha=alpha,
+        npu_free=npu_free, first_arrival=0.0, window=n * gamma, width=width,
+    )
+    chosen = dict(picks)
+    decisions = []
+    free = max(npu_free, 0.0)
+    for k in range(n):
+        j = chosen.get(k)
+        if j is None:
+            decisions.append(Decision(k, Where.SKIP))
+            continue
+        start = max(free, k * gamma)
+        free = start + models[j].t_npu
+        decisions.append(Decision(k, Where.NPU, j, stream.r_max, start=start, finish=free))
+    return RoundPlan(
+        decisions=decisions, horizon=n, expected_utility=utility, npu_busy_until=free
+    )

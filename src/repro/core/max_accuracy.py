@@ -28,6 +28,7 @@ from typing import Sequence
 import numpy as np
 
 from .profiles import ModelProfile, NetworkState, StreamSpec, best_server_model
+from .registry import Param, register_policy
 from .schedule import Decision, RoundPlan, Where
 
 NEG = -1e18
@@ -186,6 +187,11 @@ def local_window_plan(
     return None
 
 
+@register_policy(
+    "max_accuracy",
+    params=(Param.number("grid", 1e-3, doc="local-phase DP time grid (s)"),),
+    doc="Paper §IV Algorithm 1: per-round Max-Accuracy offload + local DP.",
+)
 def plan_round(
     models: Sequence[ModelProfile],
     stream: StreamSpec,

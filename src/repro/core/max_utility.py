@@ -19,12 +19,13 @@ prose, alongside the edge-server admission logic that wraps this solver.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Sequence
 
 import numpy as np
 
 from .profiles import ModelProfile, NetworkState, StreamSpec
+from .registry import Param, register_policy
 from .schedule import Decision, RoundPlan, Where
 
 NEG = -1e18
@@ -161,6 +162,11 @@ def _local_decisions(
     return decisions, npu_last
 
 
+@register_policy(
+    "max_utility",
+    params=(Param.number("alpha", doc="paper Eq. (9) accuracy weight (required)"),),
+    doc="Paper §V Algorithm 2: per-round Max-Utility (rate + alpha * accuracy).",
+)
 def plan_round(
     models: Sequence[ModelProfile],
     stream: StreamSpec,

@@ -83,34 +83,53 @@ class StreamStats:
         return rate + alpha * self.processed_accuracy
 
 
+@dataclass(frozen=True)
+class PlanError:
+    """One feasibility violation of a plan; ``frame`` is round-relative.
+
+    Stringifies to the human-readable message, so audit loops can use the
+    structured ``frame`` field while assertions still print useful text.
+    """
+
+    frame: int
+    message: str
+
+    def __str__(self) -> str:
+        return self.message
+
+
 def validate_plan(
     plan: RoundPlan,
     *,
     gamma: float,
     deadline: float,
     tol: float = 1e-9,
-) -> list[str]:
+) -> list[PlanError]:
     """Feasibility audit used by tests and the simulator (defence in depth).
 
     Checks the paper's constraints (2)/(3)/(10)/(11): every processed frame
     finishes within ``arrival + deadline``; NPU decisions do not overlap;
     offloads do not overlap on the link.
     """
-    errors: list[str] = []
+    errors: list[PlanError] = []
     npu_prev_end = -float("inf")
     for d in sorted(plan.decisions, key=lambda d: (d.start, d.frame)):
         if not d.is_processed():
             continue
         arrival = d.frame * gamma
         if d.finish > arrival + deadline + tol:
-            errors.append(
-                f"frame {d.frame}: finish {d.finish:.4f} > deadline {arrival + deadline:.4f}"
-            )
+            errors.append(PlanError(
+                d.frame, f"frame {d.frame}: finish {d.finish:.4f} > deadline {arrival + deadline:.4f}"
+            ))
         if d.start + tol < arrival:
-            errors.append(f"frame {d.frame}: starts {d.start:.4f} before arrival {arrival:.4f}")
+            errors.append(PlanError(
+                d.frame, f"frame {d.frame}: starts {d.start:.4f} before arrival {arrival:.4f}"
+            ))
         if d.where is Where.NPU:
             if d.start + tol < npu_prev_end:
-                errors.append(f"frame {d.frame}: NPU overlap ({d.start:.4f} < {npu_prev_end:.4f})")
+                errors.append(PlanError(
+                    d.frame, f"frame {d.frame}: NPU overlap ({d.start:.4f} < {npu_prev_end:.4f})"
+                ))
             npu_prev_end = d.finish if d.finish > npu_prev_end else npu_prev_end
     return errors
 

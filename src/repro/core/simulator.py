@@ -93,7 +93,7 @@ def simulate(
 
         horizon = max(plan.horizon, 1)
         errors = validate_plan(plan, gamma=gamma, deadline=stream.deadline) if strict else []
-        bad_frames = {int(e.split()[1].rstrip(":")) for e in errors} if errors else set()
+        bad_frames = {e.frame for e in errors}
 
         for d in plan.decisions:
             if d.frame >= horizon or head + d.frame >= n_frames:
@@ -107,6 +107,8 @@ def simulate(
                 else m.accuracy(stream.r_max, where="npu")
             )
             stats.frames_processed += 1
+            if d.where is Where.SERVER:
+                stats.frames_offloaded += 1
             stats.accuracy_sum += acc
         stats.frames_missed_deadline += len(bad_frames)
         npu_busy_abs = t0 + plan.npu_busy_until
@@ -115,29 +117,20 @@ def simulate(
 
 
 def make_policy(name: str, *, alpha: float | None = None, **kw) -> Policy:
-    """Factory mapping paper policy names to plan_round callables."""
-    from . import baselines, max_accuracy, max_utility
+    """Deprecated shim over the policy registry — prefer ``PolicySpec``.
 
-    if name == "max_accuracy":
-        return lambda m, s, n, *, npu_free: max_accuracy.plan_round(m, s, n, npu_free=npu_free, **kw)
-    if name == "max_utility":
-        assert alpha is not None, "max_utility needs alpha"
-        return lambda m, s, n, *, npu_free: max_utility.plan_round(
-            m, s, n, alpha=alpha, npu_free=npu_free, **kw
-        )
-    if name == "offload":
-        return lambda m, s, n, *, npu_free: baselines.offload_plan_round(
-            m, s, n, npu_free=npu_free, alpha=alpha, **kw
-        )
-    if name == "local":
-        return lambda m, s, n, *, npu_free: baselines.local_plan_round(
-            m, s, n, npu_free=npu_free, alpha=alpha, **kw
-        )
-    if name == "deepdecision":
-        return lambda m, s, n, *, npu_free: baselines.deepdecision_plan_round(
-            m, s, n, npu_free=npu_free, alpha=alpha, **kw
-        )
-    raise ValueError(f"unknown policy {name!r}")
+    Builds the named policy through :mod:`repro.core.registry`, so unknown
+    names, unknown parameters, and a missing required ``alpha`` (e.g. for
+    ``max_utility``) all raise ``ValueError`` instead of being silently
+    swallowed.  ``alpha=None`` is dropped before validation because the
+    legacy signature passed it unconditionally.
+    """
+    from .registry import PolicySpec
+
+    params = dict(kw)
+    if alpha is not None:
+        params["alpha"] = alpha
+    return PolicySpec(name, params).build()
 
 
 # ---------------------------------------------------------------------------
@@ -375,7 +368,7 @@ def simulate_multi(
             if strict
             else []
         )
-        bad_frames = {int(e.split()[1].rstrip(":")) for e in errors} if errors else set()
+        bad_frames = {e.frame for e in errors}
 
         for d in plan.decisions:
             if d.frame >= horizon or head[cid] + d.frame >= n_frames:

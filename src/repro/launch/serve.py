@@ -6,28 +6,32 @@ pair, profile them, and run the FastVA controller over a synthetic video.
 
 This is the end-to-end driver for the paper's kind (serving): batched frame
 requests scheduled across the quantized local path and the full-precision
-edge path under a per-frame deadline.
+edge path under a per-frame deadline.  The CLI is a thin wrapper that builds
+a declarative ``ScenarioSpec`` and routes it through ``Session.run_serving``;
+``run_scenario`` is the engine that the Session facade calls back into.
 """
 from __future__ import annotations
 
 import argparse
 import time
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:
+    from ..session import ScenarioSpec
+
+# How long each known classifier trains before profiling: enough to separate
+# the fp32/int8 accuracy profiles on the synthetic video distribution.
+TRAIN_STEPS = {"resnet-50": 150, "squeezenet": 400}
 
 
-def main(argv: list[str] | None = None) -> dict:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--policy", default="max_accuracy", choices=["max_accuracy", "max_utility"])
-    ap.add_argument("--alpha", type=float, default=200.0)
-    ap.add_argument("--frames", type=int, default=200)
-    ap.add_argument("--fps", type=float, default=30.0)
-    ap.add_argument("--bandwidth", type=float, default=2.0, help="Mbps")
-    ap.add_argument("--rtt-ms", type=float, default=100.0)
-    ap.add_argument("--deadline-ms", type=float, default=200.0)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+def run_scenario(spec: "ScenarioSpec") -> dict:
+    """Build the real-model serving stack for ``spec`` and run it.
 
-    import dataclasses
-
+    The model *names* in ``spec.models`` select architectures from
+    ``repro.configs``; their profiles are re-measured live on this host
+    (latency) and on held-out synthetic frames (accuracy), because serving
+    schedules against reality, not against Table II.
+    """
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -35,12 +39,14 @@ def main(argv: list[str] | None = None) -> dict:
     from .. import configs, quant
     from ..arch import classifier_forward
     from ..arch import abstract_params as arch_params
-    from ..core import BandwidthEstimator, OnlineController, StreamSpec, profile_ms
+    from ..core import BandwidthEstimator, OnlineController, profile_ms
     from ..models.common import init_tree
     from ..serving import ModelEndpoint, VideoServer, make_synthetic_video
 
     n_classes = 10
     res = 32
+    seed = spec.seed
+    net0 = spec.trace.build().at(0.0)
 
     def quick_train(arch, params, state, *, steps=120, bs=32, lr=3e-3, seed=7):
         """Fit the classifier to the synthetic video distribution so the
@@ -73,18 +79,20 @@ def main(argv: list[str] | None = None) -> dict:
 
     # The paper's model pair: accurate (resnet) vs compact (squeezenet).
     pair = []
-    for name, tsteps in (("resnet-50", 150), ("squeezenet", 400)):
+    for m in spec.models:
+        name = m.name
+        tsteps = TRAIN_STEPS.get(name, 150)
         arch = configs.get(name, smoke=True)
         specs, state_specs = arch_params(arch)
-        params = init_tree(jax.random.key(args.seed), specs)
-        state = init_tree(jax.random.key(args.seed + 1), state_specs)
+        params = init_tree(jax.random.key(seed), specs)
+        state = init_tree(jax.random.key(seed + 1), state_specs)
         params, state, final_loss = quick_train(arch, params, state, steps=tsteps)
         print(f"{name}: trained {tsteps} steps, loss={final_loss:.3f}", flush=True)
         qparams, qstats = quant.npu_variant(params)
         fwd = lambda p, x, a=arch, s=state: classifier_forward(a, p, s, x, train=False)[0]
         pair.append((name, arch, params, qparams, fwd, qstats))
 
-    frames, labels = make_synthetic_video(args.frames, n_classes=n_classes, res=res, seed=args.seed)
+    frames, labels = make_synthetic_video(spec.n_frames, n_classes=n_classes, res=res, seed=seed)
     x0 = jnp.asarray(frames[:1])
 
     # Profile both variants on this host; feed measured times + the paper's
@@ -119,23 +127,53 @@ def main(argv: list[str] | None = None) -> dict:
               f"acc_fp={acc_fp:.3f} acc_int8={acc_q:.3f} quant_err={qstats.mean_rel_err:.4f}",
               flush=True)
 
-    stream = StreamSpec(fps=args.fps, deadline=args.deadline_ms / 1e3)
     controller = OnlineController(
         models=models,
-        stream=stream,
-        policy_name=args.policy,
-        alpha=args.alpha if args.policy == "max_utility" else None,
-        estimator=BandwidthEstimator(init_bps=args.bandwidth * 1e6),
+        stream=spec.stream,
+        policy=spec.policy,
+        estimator=BandwidthEstimator(init_bps=net0.bandwidth_bps),
     )
-    controller.estimator.observe_rtt(args.rtt_ms / 1e3)
+    controller.estimator.observe_rtt(net0.rtt)
     server = VideoServer(
-        controller=controller, npu_endpoints=npu_eps, edge_endpoints=edge_eps, stream=stream
+        controller=controller, npu_endpoints=npu_eps, edge_endpoints=edge_eps, stream=spec.stream
     )
     summary = server.run(frames, labels)
-    summary["policy"] = args.policy
+    summary["policy"] = spec.policy.name
     summary["scheduler_rounds"] = controller.rounds
     print(f"serve summary: {summary}", flush=True)
     return summary
+
+
+def main(argv: list[str] | None = None) -> dict:
+    from ..core.registry import PolicySpec, available_policies
+    from ..session import ScenarioSpec, Session, TraceSpec
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", default="max_accuracy", choices=available_policies())
+    ap.add_argument("--alpha", type=float, default=200.0,
+                    help="utility weight (only passed to policies that take alpha)")
+    ap.add_argument("--frames", type=int, default=200)
+    ap.add_argument("--fps", type=float, default=30.0)
+    ap.add_argument("--bandwidth", type=float, default=2.0, help="Mbps")
+    ap.add_argument("--rtt-ms", type=float, default=100.0)
+    ap.add_argument("--deadline-ms", type=float, default=200.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from ..core import StreamSpec
+    from ..core.registry import get_policy
+
+    needs_alpha = any(p.name == "alpha" and p.required for p in get_policy(args.policy).params)
+    spec = ScenarioSpec(
+        policy=PolicySpec(args.policy, {"alpha": args.alpha} if needs_alpha else {}),
+        n_frames=args.frames,
+        stream=StreamSpec(fps=args.fps, deadline=args.deadline_ms / 1e3),
+        trace=TraceSpec(mbps=args.bandwidth, rtt_ms=args.rtt_ms),
+        seed=args.seed,
+        label="launch.serve",
+    )
+    report = Session(spec).run_serving()
+    return report.meta
 
 
 if __name__ == "__main__":

@@ -13,7 +13,6 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import os
-import sys
 import time
 
 
@@ -39,7 +38,6 @@ def main(argv: list[str] | None = None) -> dict:
     args = ap.parse_args(argv)
 
     import jax
-    import numpy as np
 
     from .. import configs
     from ..arch import ShapeSpec

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Callable, Iterable, Mapping
+from typing import Any, Iterable
 
 import jax
 import jax.numpy as jnp

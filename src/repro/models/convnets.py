@@ -9,12 +9,12 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any
+
 
 import jax
 import jax.numpy as jnp
 
-from .common import ParamSpec, shard, spec
+from .common import shard, spec
 from .lm import _stack
 
 BN_MOMENTUM = 0.9

@@ -9,12 +9,12 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any
+
 
 import jax
 import jax.numpy as jnp
 
-from .common import ParamSpec, shard, spec
+from .common import shard, spec
 
 # ---------------------------------------------------------------------------
 # Norms

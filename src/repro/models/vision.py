@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import layers as L
-from .common import ParamSpec, shard, spec
+from .common import shard, spec
 from .lm import _stack
 
 # ---------------------------------------------------------------------------

@@ -298,9 +298,12 @@ class VideoServer:
 
     def summary(self) -> dict:
         rs = self.results
+        spec = getattr(self.controller, "policy", None)
+        policy = spec.to_json() if spec is not None else None
         if not rs:
-            return {"frames": 0}
+            return {"frames": 0, "policy_spec": policy}
         return {
+            "policy_spec": policy,
             "frames": len(rs),
             "accuracy": sum(r.correct for r in rs) / len(rs),
             "npu_frames": sum(r.where == "npu" for r in rs),

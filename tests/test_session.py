@@ -1,0 +1,309 @@
+"""Front-door tests: policy registry, declarative specs, and the Session
+facade.
+
+Three layers of coverage:
+  * registry — registration/lookup, strict parameter validation (unknown
+    name, unknown param, missing required param, wrong type all raise
+    ``ValueError`` at spec-construction time);
+  * serialization — ``PolicySpec`` and ``ScenarioSpec`` (incl. fleet,
+    piecewise trace, custom model profile) round-trip through JSON;
+  * golden equivalence — ``Session.run_sim`` reproduces the legacy
+    ``simulate(make_policy(...))`` stats exactly for EVERY registered
+    policy, so the front door never drifts from the audited simulator.
+"""
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.core import (
+    PAPER_MODELS,
+    PAPER_STREAM,
+    OnlineController,
+    PolicySpec,
+    StreamSpec,
+    Trace,
+    make_policy,
+    profile_ms,
+    simulate,
+    simulate_multi,
+)
+from repro.core.edge_server import EdgeServerScheduler, make_fleet
+from repro.core.registry import Param, available_policies, get_policy, register_policy
+from repro.session import FleetSpec, RunReport, ScenarioSpec, Session, TraceSpec
+
+# Every registered policy with the params a sweep would use.  The golden
+# test below iterates available_policies() and fails if something registers
+# without being added here — new policies must join the equivalence sweep.
+POLICY_PARAMS: dict[str, dict] = {
+    "max_accuracy": {},
+    "max_utility": {"alpha": 200.0},
+    "local": {},
+    "offload": {},
+    "deepdecision": {},
+    "brute_force": {},
+    "jax_accuracy": {},
+    "jax_utility": {"alpha": 200.0},
+}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+def test_all_paper_policies_registered():
+    names = available_policies()
+    for expect in POLICY_PARAMS:
+        assert expect in names
+    entry = get_policy("max_utility")
+    assert entry.fn is not None and entry.param("alpha").required
+
+
+def test_unknown_policy_raises():
+    with pytest.raises(ValueError, match="unknown policy"):
+        get_policy("definitely_not_a_policy")
+    with pytest.raises(ValueError, match="unknown policy"):
+        PolicySpec("definitely_not_a_policy")
+
+
+def test_unknown_param_is_hard_error():
+    with pytest.raises(ValueError, match="accepts no parameter"):
+        PolicySpec("max_accuracy", {"alpha": 200.0})
+    with pytest.raises(ValueError, match="accepts no parameter"):
+        make_policy("max_accuracy", alpha=200.0)
+
+
+def test_missing_required_param_raises_value_error():
+    # The legacy code path asserted; the registry raises a proper ValueError.
+    with pytest.raises(ValueError, match="requires parameter 'alpha'"):
+        PolicySpec("max_utility")
+    with pytest.raises(ValueError, match="requires parameter 'alpha'"):
+        make_policy("max_utility")
+
+
+def test_param_type_checked():
+    with pytest.raises(ValueError, match="expects"):
+        PolicySpec("max_utility", {"alpha": "two hundred"})
+    with pytest.raises(ValueError, match="expects"):
+        PolicySpec("local", {"window_frames": 2.5})
+    # nullable param accepts None; non-nullable rejects it
+    PolicySpec("local", {"alpha": None})
+    with pytest.raises(ValueError, match="must not be None"):
+        PolicySpec("max_utility", {"alpha": None})
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+
+        @register_policy("max_accuracy", params=(Param.number("grid", 1e-3),))
+        def impostor(models, stream, net, *, npu_free=0.0, grid=1e-3):  # pragma: no cover
+            raise AssertionError
+
+
+def test_defaults_resolved_into_spec():
+    spec = PolicySpec("deepdecision")
+    assert spec.params == {"alpha": None, "window_s": 1.0}
+    assert spec == PolicySpec("deepdecision", {"window_s": 1.0})
+
+
+# ---------------------------------------------------------------------------
+# Serialization
+# ---------------------------------------------------------------------------
+
+
+def test_policy_spec_json_round_trip():
+    for name, params in POLICY_PARAMS.items():
+        spec = PolicySpec(name, params)
+        assert PolicySpec.from_json(json.loads(json.dumps(spec.to_json()))) == spec
+
+
+def test_scenario_spec_json_round_trip():
+    custom = profile_ms(
+        "tiny", t_npu_ms=5.0, acc_npu={224: 0.3}, acc_server={45: 0.1, 224: 0.4}
+    )
+    spec = ScenarioSpec(
+        policy=PolicySpec("max_utility", {"alpha": 50.0}),
+        n_frames=42,
+        stream=StreamSpec(fps=25.0, deadline=0.15),
+        models=("resnet-50", custom),
+        trace=TraceSpec(kind="piecewise", rtt_ms=80.0, points=((0.0, 3.5), (2.0, 0.8))),
+        fleet=FleetSpec(n_clients=3, allocation="priority", capacity=2,
+                        priorities=(0, 1, 2)),
+        strict=False,
+        seed=7,
+        label="round-trip",
+    )
+    rt = ScenarioSpec.from_json(json.dumps(spec.to_json()))
+    assert rt == spec
+    assert rt.models[1].t_npu == pytest.approx(5e-3)
+    assert rt.models[1].acc_server == {45: 0.1, 224: 0.4}
+
+
+def test_policy_spec_hashable_and_trace_spec_normalizes():
+    # Frozen specs must be usable as dict keys / set members for sweep dedup.
+    assert hash(PolicySpec("max_accuracy")) == hash(PolicySpec("max_accuracy", {"grid": 1e-3}))
+    assert len({PolicySpec("local"), PolicySpec("local")}) == 1
+    # Fields the active trace kind does not use are normalized away, so the
+    # JSON round-trip (which only serializes active fields) stays exact.
+    t = TraceSpec(kind="piecewise", mbps=9.9, points=((0.0, 3.5),))
+    assert TraceSpec.from_json(t.to_json()) == t
+    c = TraceSpec(kind="constant", points=((0.0, 1.0),))
+    assert c.points == () and TraceSpec.from_json(c.to_json()) == c
+
+
+def test_scenario_spec_validation_errors():
+    with pytest.raises(ValueError, match="unknown trace kind"):
+        TraceSpec(kind="sinusoid")
+    with pytest.raises(ValueError, match="piecewise trace needs"):
+        TraceSpec(kind="piecewise")
+    with pytest.raises(ValueError, match="unknown allocation"):
+        FleetSpec(allocation="round_robin")
+    with pytest.raises(ValueError, match="n_clients=2 entries"):
+        FleetSpec(n_clients=2, weights=(1.0,))
+    with pytest.raises(ValueError, match="unknown model preset"):
+        ScenarioSpec(policy=PolicySpec("local"), models=("alexnet",))
+    with pytest.raises(ValueError, match="n_frames"):
+        ScenarioSpec(policy=PolicySpec("local"), n_frames=0)
+
+
+# ---------------------------------------------------------------------------
+# Golden equivalence: front door == legacy path, for every policy
+# ---------------------------------------------------------------------------
+
+GOLD_FRAMES = 24
+
+
+@pytest.mark.parametrize("name", sorted(POLICY_PARAMS))
+def test_run_sim_matches_legacy_simulate_exactly(name):
+    params = POLICY_PARAMS[name]
+    legacy = simulate(
+        make_policy(name, **params),
+        list(PAPER_MODELS),
+        PAPER_STREAM,
+        Trace.constant(2.5),
+        GOLD_FRAMES,
+    )
+    report = Session(
+        ScenarioSpec(
+            policy=PolicySpec(name, params), n_frames=GOLD_FRAMES, trace=TraceSpec(mbps=2.5)
+        )
+    ).run_sim()
+    st = report.stats
+    assert st.accuracy_sum == legacy.accuracy_sum  # bit-identical, not approx
+    assert st.frames_processed == legacy.frames_processed
+    assert st.frames_missed_deadline == legacy.frames_missed_deadline
+    assert st.frames_offloaded == legacy.frames_offloaded
+    assert st.frames_total == legacy.frames_total == GOLD_FRAMES
+
+
+def test_every_registered_policy_is_in_golden_sweep():
+    assert set(available_policies()) == set(POLICY_PARAMS)
+
+
+# ---------------------------------------------------------------------------
+# Session modes
+# ---------------------------------------------------------------------------
+
+
+def test_run_multi_matches_direct_scheduler_path():
+    fleet = FleetSpec(n_clients=3, allocation="weighted_fair", capacity=4)
+    spec = ScenarioSpec(
+        policy=PolicySpec("max_accuracy"),
+        n_frames=GOLD_FRAMES,
+        trace=TraceSpec(mbps=12.0),
+        fleet=fleet,
+    )
+    rep = Session(spec).run_multi()
+    assert rep.mode == "multi" and len(rep.streams) == 3
+
+    sched = EdgeServerScheduler(
+        make_fleet(3, policy=PolicySpec("max_accuracy")), policy="weighted_fair", capacity=4
+    )
+    ms = simulate_multi(sched, Trace.constant(12.0), GOLD_FRAMES)
+    for got, want in zip(rep.streams, ms.per_client):
+        assert got.accuracy_sum == want.accuracy_sum
+        assert got.frames_missed_deadline == want.frames_missed_deadline
+    assert rep.meta["server_jobs"] == ms.server_jobs
+
+
+def test_run_online_audits_against_true_trace():
+    # Bandwidth halves after 1 s; the estimator must adapt and the audit must
+    # never report more processed frames than exist.
+    spec = ScenarioSpec(
+        policy=PolicySpec("max_accuracy"),
+        n_frames=90,
+        trace=TraceSpec(kind="piecewise", points=((0.0, 3.5), (1.0, 0.8))),
+    )
+    rep = Session(spec).run_online()
+    st = rep.stats
+    assert rep.mode == "online"
+    assert st.frames_total == 90
+    assert 0 < st.frames_processed <= 90
+    assert st.frames_processed + st.frames_missed_deadline <= 90 + st.frames_offloaded
+    assert rep.meta["rounds"] == st.schedule_calls > 0
+    assert rep.meta["estimated_bps"] < 3.5e6  # belief moved off the initial value
+
+
+def test_run_dispatch_and_report_json():
+    spec = ScenarioSpec(policy=PolicySpec("local"), n_frames=12)
+    rep = Session(spec).run("sim")
+    assert isinstance(rep, RunReport)
+    payload = json.loads(json.dumps(rep.to_json()))
+    assert payload["mode"] == "sim"
+    assert payload["streams"][0]["frames_total"] == 12
+    with pytest.raises(ValueError, match="unknown mode"):
+        Session(spec).run("warp")
+
+
+def test_session_cli_smoke(tmp_path, capsys):
+    from repro.session import main
+
+    spec_file = tmp_path / "scenario.json"
+    spec = ScenarioSpec(policy=PolicySpec("local"), n_frames=12, label="cli-smoke")
+    spec_file.write_text(json.dumps(spec.to_json()))
+    assert main([str(spec_file), "--mode", "sim"]) == 0
+    out = json.loads(capsys.readouterr().out)
+    assert out["label"] == "cli-smoke" and out["streams"][0]["frames_total"] == 12
+    assert main(["--list-policies"]) == 0
+    assert set(capsys.readouterr().out.split()) == set(available_policies())
+
+
+# ---------------------------------------------------------------------------
+# Retrofitted constructors
+# ---------------------------------------------------------------------------
+
+
+def test_controller_accepts_spec_and_legacy_kwargs():
+    c1 = OnlineController(models=list(PAPER_MODELS), stream=PAPER_STREAM,
+                          policy=PolicySpec("max_utility", {"alpha": 100.0}))
+    c2 = OnlineController(models=list(PAPER_MODELS), stream=PAPER_STREAM,
+                          policy_name="max_utility", alpha=100.0)
+    assert c1.policy == c2.policy
+    p1, p2 = c1.next_plan(0), c2.next_plan(0)
+    assert [(d.frame, d.where, d.model) for d in p1.decisions] == [
+        (d.frame, d.where, d.model) for d in p2.decisions
+    ]
+    with pytest.raises(ValueError, match="requires parameter 'alpha'"):
+        OnlineController(models=list(PAPER_MODELS), stream=PAPER_STREAM,
+                         policy_name="max_utility")
+
+
+def test_edge_client_accepts_policy_spec():
+    fleet = make_fleet(2, policy=PolicySpec("max_utility", {"alpha": 200.0}))
+    assert all(c.policy.name == "max_utility" for c in fleet)
+    legacy = make_fleet(2, policy_name="max_utility", alpha=200.0)
+    assert [c.policy for c in fleet] == [c.policy for c in legacy]
+
+
+def test_oracle_policy_upper_bounds_max_accuracy():
+    """The brute-force oracle, run as a policy, must do at least as well as
+    Max-Accuracy on the same trace (it searches a superset of schedules)."""
+    kw = dict(models=list(PAPER_MODELS), stream=PAPER_STREAM)
+    ma = simulate(make_policy("max_accuracy"), kw["models"], kw["stream"],
+                  Trace.constant(2.5), GOLD_FRAMES)
+    oracle = simulate(make_policy("brute_force", grid=2e-3), kw["models"], kw["stream"],
+                      Trace.constant(2.5), GOLD_FRAMES)
+    assert oracle.frames_missed_deadline == 0
+    assert oracle.mean_accuracy >= ma.mean_accuracy - 1e-9

@@ -216,7 +216,7 @@ def test_sharding_rules_guards():
     from jax.sharding import PartitionSpec as P
 
     from repro.launch.mesh import make_host_mesh
-    from repro.models.common import ParamSpec
+
     from repro.sharding.rules import MeshRules, train_rules
 
     mesh = make_host_mesh(data=1, model=1)
