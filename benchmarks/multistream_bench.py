@@ -13,8 +13,10 @@ What the numbers show (acceptance criteria for the multi-tenant subsystem):
     under contention, so the edge-server policy beats it on aggregate
     accuracy for every N >= 2.
 
-Every cell is one declarative ``ScenarioSpec`` (policy + ``FleetSpec``) run
-through ``Session.run_multi``.  Run directly for a human-readable table:
+The whole (bandwidth x allocation x client-count) lattice is ONE declarative
+``SweepGrid`` run through ``Session.run_sweep`` (each point executes the
+audited ``run_multi`` engine); only the priority demo is a hand-built
+single ``ScenarioSpec``.  Run directly for a human-readable table:
 
     PYTHONPATH=src python benchmarks/multistream_bench.py
 """
@@ -26,7 +28,7 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.core import PolicySpec  # noqa: E402
-from repro.session import FleetSpec, ScenarioSpec, Session, TraceSpec  # noqa: E402
+from repro.session import FleetSpec, ScenarioSpec, Session, SweepGrid, TraceSpec  # noqa: E402
 
 N_FRAMES = 60
 CLIENT_COUNTS = (1, 2, 4, 8)
@@ -49,10 +51,26 @@ def _run(mbps: float, allocation: str, n: int, *, capacity: int = CAPACITY,
 
 
 def _cells(policies=POLICIES, bandwidths=BANDWIDTHS_MBPS, counts=CLIENT_COUNTS):
+    """Yield (mbps, allocation, n, SweepPoint) for every lattice cell, in the
+    legacy bandwidth > policy > count display order."""
+    base = ScenarioSpec(
+        policy=PolicySpec("max_accuracy"),
+        n_frames=N_FRAMES,
+        fleet=FleetSpec(capacity=CAPACITY),
+        label="multistream",
+    )
+    grid = SweepGrid(
+        bandwidth_mbps=bandwidths, n_clients=counts, allocation=policies
+    )
+    report = Session(base).run_sweep(grid)
+    by_cell = {
+        (p.overrides["bandwidth_mbps"], p.overrides["allocation"], p.overrides["n_clients"]): p
+        for p in report
+    }
     for mbps in bandwidths:
         for pol in policies:
             for n in counts:
-                yield mbps, pol, n, _run(mbps, pol, n)
+                yield mbps, pol, n, by_cell[(mbps, pol, n)]
 
 
 def multistream_scaling():

@@ -5,17 +5,19 @@ Each function returns a list of (name, us_per_call, derived) rows where
 ``derived`` is the figure's y-value and ``us_per_call`` is the mean wall time
 of one policy round (the schedule-decision cost the paper reports < 1 ms).
 
-Every cell goes through the declarative front door: a ``ScenarioSpec`` built
-from (policy name, params, bandwidth, fps, rtt) and run by ``Session`` — so
-sweeping a new policy (including the ``brute_force`` oracle and the jitted
-``jax_*`` DPs) is just another name in a tuple.
+Every figure sweep is one ``Session.run_sweep`` over a declarative
+``SweepGrid`` (bandwidth/fps/rtt/policy-param axes), so adding a policy —
+including the ``brute_force`` oracle and the jitted ``jax_*`` DPs, which the
+sweep engine routes through the vectorized ``sim_batch`` backend — is just
+another name in a tuple.  One-off cells (fig 7's oracle gap) still use a
+single-point ``ScenarioSpec``.
 """
 from __future__ import annotations
 
 import time
 
 from repro.core import PAPER_MODELS, PAPER_STREAM, PolicySpec, StreamSpec, brute_force, network_mbps
-from repro.session import ScenarioSpec, Session, TraceSpec
+from repro.session import ScenarioSpec, Session, SweepGrid, TraceSpec
 
 N_FRAMES = 120
 POLICIES = ("max_accuracy", "local", "offload", "deepdecision")
@@ -38,6 +40,25 @@ def _sim(
         trace=TraceSpec(mbps=mbps, rtt_ms=rtt_ms),
     )
     return Session(spec).run_sim().stats
+
+
+def _sweep(
+    policy: str,
+    *,
+    params: dict | None = None,
+    params_axes: dict | None = None,
+    n_frames: int = N_FRAMES,
+    **axes,
+):
+    """One figure sweep: the base paper scenario crossed with ``axes``
+    (scenario axes as kwargs, policy-param axes via ``params_axes``)."""
+    spec = ScenarioSpec(
+        policy=PolicySpec(policy, params or {}),
+        n_frames=n_frames,
+        trace=TraceSpec(mbps=2.5),
+        label=f"paper_figures/{policy}",
+    )
+    return Session(spec).run_sweep(SweepGrid(params=params_axes or {}, **axes))
 
 
 def _row(name: str, stats, derived: float):
@@ -65,19 +86,21 @@ def fig4_accuracy_resolution():
 
 def fig5_bandwidth_accuracy():
     rows = []
-    for mbps in (0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5):
-        for pol in POLICIES:
-            st = _sim(pol, mbps)
-            rows.append(_row(f"fig5/B{mbps}/{pol}", st, st.mean_accuracy))
+    for pol in POLICIES:
+        rep = _sweep(pol, bandwidth_mbps=(0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5))
+        for pt in rep:
+            st = pt.stats
+            rows.append(_row(f"fig5/B{pt.overrides['bandwidth_mbps']}/{pol}", st, st.mean_accuracy))
     return rows
 
 
 def fig6_framerate_accuracy():
     rows = []
-    for fps in (10, 20, 30, 40, 50):
-        for pol in POLICIES:
-            st = _sim(pol, 3.0, fps=fps)
-            rows.append(_row(f"fig6/fps{fps}/{pol}", st, st.mean_accuracy))
+    for pol in POLICIES:
+        rep = _sweep(pol, bandwidth_mbps=(3.0,), fps=(10, 20, 30, 40, 50))
+        for pt in rep:
+            st = pt.stats
+            rows.append(_row(f"fig6/fps{pt.overrides['fps']}/{pol}", st, st.mean_accuracy))
     return rows
 
 
@@ -98,58 +121,68 @@ def fig7_optimal_gap():
 
 def fig8_delay_accuracy():
     rows = []
-    for rtt_ms in (50, 100, 150, 200):
-        for fps in (30, 50):
-            for pol in POLICIES:
-                st = _sim(pol, 3.0, fps=fps, rtt_ms=rtt_ms)
-                rows.append(_row(f"fig8/d{rtt_ms}_fps{fps}/{pol}", st, st.mean_accuracy))
+    for pol in POLICIES:
+        rep = _sweep(pol, bandwidth_mbps=(3.0,), fps=(30, 50), rtt_ms=(50, 100, 150, 200))
+        for pt in rep:
+            o, st = pt.overrides, pt.stats
+            rows.append(_row(f"fig8/d{o['rtt_ms']}_fps{o['fps']}/{pol}", st, st.mean_accuracy))
     return rows
 
 
 def fig9_bandwidth_utility():
     rows = []
-    for alpha in (200.0, 50.0):
-        for mbps in (0.5, 1.5, 2.5, 3.5):
-            for pol in ("max_utility", "local", "offload", "deepdecision"):
-                st = _sim(pol, mbps, params={"alpha": alpha})
-                rows.append(_row(f"fig9/a{alpha:.0f}_B{mbps}/{pol}", st, st.utility(alpha)))
+    for pol in ("max_utility", "local", "offload", "deepdecision"):
+        rep = _sweep(pol, params={"alpha": 200.0},
+                     bandwidth_mbps=(0.5, 1.5, 2.5, 3.5), params_axes={"alpha": (200.0, 50.0)})
+        for pt in rep:
+            o, st = pt.overrides, pt.stats
+            rows.append(_row(f"fig9/a{o['alpha']:.0f}_B{o['bandwidth_mbps']}/{pol}",
+                             st, st.utility(o["alpha"])))
     return rows
 
 
 def fig10_framerate_utility():
     rows = []
-    for alpha in (200.0, 50.0):
-        for fps in (10, 30, 50):
-            for pol in ("max_utility", "local", "offload"):
-                st = _sim(pol, 2.5, fps=fps, params={"alpha": alpha})
-                rows.append(_row(f"fig10/a{alpha:.0f}_fps{fps}/{pol}", st, st.utility(alpha)))
+    for pol in ("max_utility", "local", "offload"):
+        rep = _sweep(pol, params={"alpha": 200.0},
+                     bandwidth_mbps=(2.5,), fps=(10, 30, 50), params_axes={"alpha": (200.0, 50.0)})
+        for pt in rep:
+            o, st = pt.overrides, pt.stats
+            rows.append(_row(f"fig10/a{o['alpha']:.0f}_fps{o['fps']}/{pol}",
+                             st, st.utility(o["alpha"])))
     return rows
 
 
 def fig11_delay_utility():
     rows = []
-    for alpha in (200.0, 50.0):
-        for rtt_ms in (50, 100, 150):
-            for pol in ("max_utility", "local", "offload"):
-                st = _sim(pol, 2.0, rtt_ms=rtt_ms, params={"alpha": alpha})
-                rows.append(_row(f"fig11/a{alpha:.0f}_d{rtt_ms}/{pol}", st, st.utility(alpha)))
+    for pol in ("max_utility", "local", "offload"):
+        rep = _sweep(pol, params={"alpha": 200.0},
+                     bandwidth_mbps=(2.0,), rtt_ms=(50, 100, 150), params_axes={"alpha": (200.0, 50.0)})
+        for pt in rep:
+            o, st = pt.overrides, pt.stats
+            rows.append(_row(f"fig11/a{o['alpha']:.0f}_d{o['rtt_ms']}/{pol}",
+                             st, st.utility(o["alpha"])))
     return rows
 
 
 def oracle_gap_sweep():
     """Beyond-paper: the oracle and the jitted DPs as *policies*, swept
-    uniformly with the heuristics through the registry front door.
+    uniformly with the heuristics through the sweep front door (the jax_*
+    policies route through the batched sim_batch backend here).
     derived = mean accuracy (or utility); the oracle upper-bounds each cell
     up to its time grid (default 5 ms — tighten ``grid`` to close the gap)."""
     rows = []
-    for mbps in (1.0, 2.5):
-        for pol in ("max_accuracy", "brute_force", "jax_accuracy", "local"):
-            st = _sim(pol, mbps, n_frames=60)
-            rows.append(_row(f"oracle/B{mbps}/{pol}", st, st.mean_accuracy))
+    for pol in ("max_accuracy", "brute_force", "jax_accuracy", "local"):
+        rep = _sweep(pol, n_frames=60, bandwidth_mbps=(1.0, 2.5))
+        for pt in rep:
+            st = pt.stats
+            rows.append(_row(f"oracle/B{pt.overrides['bandwidth_mbps']}/{pol}",
+                             st, st.mean_accuracy))
     alpha = 200.0
     for pol in ("max_utility", "brute_force", "jax_utility"):
-        st = _sim(pol, 2.5, params={"alpha": alpha}, n_frames=60)
-        rows.append(_row(f"oracle/a{alpha:.0f}_B2.5/{pol}", st, st.utility(alpha)))
+        rep = _sweep(pol, params={"alpha": alpha}, n_frames=60, bandwidth_mbps=(2.5,))
+        rows.append(_row(f"oracle/a{alpha:.0f}_B2.5/{pol}", rep.points[0].stats,
+                         rep.points[0].stats.utility(alpha)))
     return rows
 
 

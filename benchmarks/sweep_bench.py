@@ -1,0 +1,141 @@
+"""Fleet-sweep engine benchmark: reference loop vs batched jit/vmap backend.
+
+Runs the same (deadline x fps x bandwidth) scenario grid through both
+``Session.run_sweep`` backends at grid sizes {10, 100, 1000} and reports
+wall-clock plus an exactness check (the batched backend must reproduce the
+reference stats bit-for-bit — the speedup is worthless otherwise).  Results
+land in ``BENCH_sweep.json`` so CI can track the perf trajectory:
+
+    PYTHONPATH=src python benchmarks/sweep_bench.py            # full ladder
+    PYTHONPATH=src python benchmarks/sweep_bench.py --smoke    # 10-point grid
+
+Acceptance criterion tracked here: at the 1000-point grid the batched
+backend is >= 10x faster than the reference loop (warm, i.e. compiled;
+``batched_cold_s`` includes jit compilation and is reported alongside).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core import PolicySpec  # noqa: E402
+from repro.session import ScenarioSpec, Session, SweepGrid  # noqa: E402
+
+N_FRAMES = 120
+POLICIES = (("jax_accuracy", {}), ("jax_utility", {"alpha": 200.0}))
+SIZES = (10, 100, 1000)
+DEFAULT_OUT = "BENCH_sweep.json"
+
+
+def make_grid(size: int) -> SweepGrid:
+    """A (deadline x fps x bandwidth) grid with exactly ``size`` points."""
+    if size == 10:
+        return SweepGrid(deadline_ms=(150.0, 200.0, 250.0, 300.0, 350.0), fps=(20.0, 40.0))
+    if size == 100:
+        return SweepGrid(
+            deadline_ms=tuple(150.0 + 20.0 * i for i in range(10)),
+            fps=(10.0, 20.0, 30.0, 40.0, 50.0),
+            bandwidth_mbps=(1.0, 2.5),
+        )
+    if size == 1000:
+        return SweepGrid(
+            deadline_ms=tuple(120.0 + 10.0 * i for i in range(20)),
+            fps=(10.0, 20.0, 30.0, 40.0, 50.0),
+            bandwidth_mbps=tuple(0.5 * (i + 1) for i in range(10)),
+        )
+    raise ValueError(f"no predefined grid of size {size}")
+
+
+def _stats_equal(a, b) -> bool:
+    return (
+        a.accuracy_sum == b.accuracy_sum
+        and a.frames_processed == b.frames_processed
+        and a.frames_missed_deadline == b.frames_missed_deadline
+        and a.frames_offloaded == b.frames_offloaded
+        and a.frames_total == b.frames_total
+    )
+
+
+def bench_cell(policy: str, params: dict, size: int) -> dict:
+    grid = make_grid(size)
+    session = Session(
+        ScenarioSpec(policy=PolicySpec(policy, params), n_frames=N_FRAMES,
+                     label=f"sweep_bench/{policy}/{size}")
+    )
+    t0 = time.perf_counter()
+    ref = session.run_sweep(grid, backend="reference")
+    reference_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    session.run_sweep(grid, backend="batched")
+    batched_cold_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    bat = session.run_sweep(grid, backend="batched")
+    batched_warm_s = time.perf_counter() - t0
+    exact = all(
+        _stats_equal(pr.stats, pb.stats) for pr, pb in zip(ref.points, bat.points)
+    )
+    return {
+        "policy": policy,
+        "grid_points": len(grid),
+        "n_frames": N_FRAMES,
+        "reference_s": reference_s,
+        "batched_cold_s": batched_cold_s,
+        "batched_warm_s": batched_warm_s,
+        "speedup_cold": reference_s / batched_cold_s if batched_cold_s > 0 else 0.0,
+        "speedup_warm": reference_s / batched_warm_s if batched_warm_s > 0 else 0.0,
+        "exact_match": exact,
+    }
+
+
+def run(sizes=SIZES, policies=POLICIES) -> dict:
+    cells = [bench_cell(pol, params, size) for size in sizes for pol, params in policies]
+    return {"bench": "sweep", "n_frames": N_FRAMES, "cells": cells}
+
+
+# run.py auto-discovery: smoke-sized rows only (the 1000-point ladder is a
+# manual / CI-artifact run — see main()).
+def sweep_backend_smoke():
+    rows = []
+    for cell in run(sizes=(10,))["cells"]:
+        name = f"sweep/{cell['policy']}/n{cell['grid_points']}"
+        rows.append((f"{name}/speedup_warm", cell["batched_warm_s"] * 1e6, cell["speedup_warm"]))
+        rows.append((f"{name}/exact", cell["reference_s"] * 1e6, float(cell["exact_match"])))
+    return rows
+
+
+ALL = [sweep_backend_smoke]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="smallest grid only (CI smoke; still emits the JSON artifact)")
+    ap.add_argument("--out", default=DEFAULT_OUT, help=f"output path (default {DEFAULT_OUT})")
+    args = ap.parse_args(argv)
+
+    result = run(sizes=(10,) if args.smoke else SIZES)
+    with open(args.out, "w") as fh:
+        json.dump(result, fh, indent=2)
+        fh.write("\n")
+
+    print(f"{'policy':>14} {'points':>7} {'ref (s)':>9} {'cold (s)':>9} "
+          f"{'warm (s)':>9} {'speedup':>8} {'exact':>6}")
+    ok = True
+    for c in result["cells"]:
+        print(f"{c['policy']:>14} {c['grid_points']:>7} {c['reference_s']:>9.2f} "
+              f"{c['batched_cold_s']:>9.2f} {c['batched_warm_s']:>9.2f} "
+              f"{c['speedup_warm']:>7.1f}x {str(c['exact_match']):>6}")
+        ok &= c["exact_match"]
+        if c["grid_points"] >= 1000:
+            ok &= c["speedup_warm"] >= 10.0
+    print(f"\nwrote {args.out}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,7 +1,9 @@
 """Reproduce Fig. 5/9 interactively: sweep bandwidth and compare policies on
-accuracy and utility — the paper's core result in one script.  Each cell is a
-declarative ScenarioSpec run through the Session front door, so adding a
-policy to the sweep is just another registry name.
+accuracy and utility — the paper's core result in one script.  Each policy's
+whole bandwidth sweep is ONE declarative ``SweepGrid`` through
+``Session.run_sweep`` (batched on device for ``jax_*`` policies, reference
+loop otherwise — see docs/simulation.md), so adding a policy to the table is
+just another registry name.
 
     PYTHONPATH=src python examples/offload_policy_sweep.py
 """
@@ -11,28 +13,26 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.core import PolicySpec  # noqa: E402
-from repro.session import ScenarioSpec, Session, TraceSpec  # noqa: E402
+from repro.session import ScenarioSpec, Session, SweepGrid  # noqa: E402
 
 BANDS = (0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5)
 
 
-def run(policy: str, mbps: float, params: dict | None = None):
-    spec = ScenarioSpec(
-        policy=PolicySpec(policy, params or {}), n_frames=120, trace=TraceSpec(mbps=mbps)
-    )
-    return Session(spec).run_sim().stats
+def sweep(policy: str, params: dict | None = None):
+    """One bandwidth sweep -> {mbps: StreamStats}."""
+    spec = ScenarioSpec(policy=PolicySpec(policy, params or {}), n_frames=120)
+    report = Session(spec).run_sweep(SweepGrid(bandwidth_mbps=BANDS))
+    return {pt.overrides["bandwidth_mbps"]: pt.stats for pt in report}
 
 
 print("Fig.5 (accuracy):  B_Mbps  max_accuracy  local  offload  deepdecision")
+acc = {pol: sweep(pol) for pol in ("max_accuracy", "local", "offload", "deepdecision")}
 for mbps in BANDS:
-    row = [f"{mbps:18.1f}"]
-    for pol in ("max_accuracy", "local", "offload", "deepdecision"):
-        row.append(f"{run(pol, mbps).mean_accuracy:12.3f}")
+    row = [f"{mbps:18.1f}"] + [f"{acc[pol][mbps].mean_accuracy:12.3f}" for pol in acc]
     print(" ".join(row))
 
 print("\nFig.9 (utility, alpha=200):")
+util = {pol: sweep(pol, {"alpha": 200.0}) for pol in ("max_utility", "local", "offload")}
 for mbps in BANDS:
-    row = [f"{mbps:18.1f}"]
-    for pol in ("max_utility", "local", "offload"):
-        row.append(f"{run(pol, mbps, {'alpha': 200.0}).utility(200.0):12.1f}")
+    row = [f"{mbps:18.1f}"] + [f"{util[pol][mbps].utility(200.0):12.1f}" for pol in util]
     print(" ".join(row))

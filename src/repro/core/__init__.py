@@ -9,8 +9,10 @@ Public surface:
   max_utility.plan_round      — §V Algorithm 2
   baselines                   — Offload / Local / DeepDecision (§VI.C)
   brute_force                 — Optimal oracle (exhaustive + grid DP + policy)
-  simulator.simulate          — audited stream replay
+  audit                       — backend-neutral plan-audit contract
+  simulator.simulate          — audited stream replay (reference loop)
   simulator.simulate_multi    — N streams, shared fluid uplink + server queue
+  sim_batch.simulate_batch    — vectorized jit+vmap sweep backend
   edge_server                 — multi-tenant admission/bandwidth scheduler
   jax_sched                   — jitted lax implementations of both DPs
   controller.OnlineController — streaming controller w/ bandwidth estimation
@@ -19,6 +21,7 @@ Declarative scenario running (ScenarioSpec/Session) lives one level up in
 ``repro.session``.
 """
 from . import (  # noqa: F401
+    audit,
     baselines,
     brute_force,
     controller,
@@ -29,8 +32,10 @@ from . import (  # noqa: F401
     profiles,
     registry,
     schedule,
+    sim_batch,
     simulator,
 )
+from .sim_batch import BatchScenario, simulate_batch  # noqa: F401
 from .controller import BandwidthEstimator, OnlineController  # noqa: F401
 from .registry import (  # noqa: F401
     Param,

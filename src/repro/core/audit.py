@@ -1,0 +1,107 @@
+"""Backend-neutral plan-audit semantics — ONE definition of "what counts".
+
+Every execution engine in this repo (the per-frame reference loops in
+``simulator.py`` / ``session.Session.run_online`` and the vectorized
+``sim_batch`` backend) must account a round plan identically, or the figures
+stop being comparable across engines.  The contract, extracted verbatim from
+the original ``simulate`` loop:
+
+  1. ``horizon = max(plan.horizon, 1)`` frames are consumed per round.
+  2. When ``strict``, the plan is validated (:func:`schedule.validate_plan`)
+     with tolerance :data:`AUDIT_TOL`; each violating frame lands in the
+     round's *bad set* (single-stream engines validate every decision,
+     shared-link engines validate the NPU subset only — offloads are audited
+     at actual completion instead).
+  3. A processed decision contributes stats only when its frame is inside
+     the plan horizon AND inside the stream (``head + frame < n_frames``)
+     AND not in the bad set; NPU decisions score ``accuracy(r_max)``,
+     server decisions ``accuracy(r)`` at the offloaded resolution.
+  4. ``frames_missed_deadline`` grows by the bad-set size of every round —
+     even for frames beyond the end of the stream (the plan was still
+     infeasible there; a policy does not get audit amnesty for overrunning).
+  5. Accuracy accumulates in decision order, round by round, in float64 —
+     the batched backend reproduces this exact summation order so its stats
+     are bit-identical, not approximately equal.
+
+``sim_batch`` implements 1-5 as a fixed-shape tensor program; the golden
+test in ``tests/test_sim_batch.py`` pins the two implementations together.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+from .profiles import ModelProfile, StreamSpec
+from .schedule import RoundPlan, StreamStats, Where, validate_plan
+
+__all__ = ["AUDIT_TOL", "apply_round", "audit_round"]
+
+# Feasibility tolerance (seconds) shared by every engine, batched included.
+AUDIT_TOL = 1e-9
+
+
+def audit_round(
+    plan: RoundPlan,
+    *,
+    gamma: float,
+    deadline: float,
+    strict: bool = True,
+    npu_only: bool = False,
+) -> tuple[int, set[int]]:
+    """Validate one round plan; return ``(horizon, bad_frames)``.
+
+    ``npu_only=True`` restricts validation to NPU decisions — the
+    shared-link engines (``simulate_multi``, ``run_online``) audit offloads
+    at *actual* completion time instead of against the plan's own estimate.
+    """
+    horizon = max(plan.horizon, 1)
+    if not strict:
+        return horizon, set()
+    audited = plan
+    if npu_only:
+        audited = RoundPlan(
+            decisions=[d for d in plan.decisions if d.where is Where.NPU],
+            horizon=horizon,
+        )
+    errors = validate_plan(audited, gamma=gamma, deadline=deadline, tol=AUDIT_TOL)
+    return horizon, {e.frame for e in errors}
+
+
+def apply_round(
+    stats: StreamStats,
+    plan: RoundPlan,
+    *,
+    models: Sequence[ModelProfile],
+    stream: StreamSpec,
+    head: int,
+    n_frames: int,
+    horizon: int,
+    bad_frames: set[int],
+    on_offload: Callable[..., None] | None = None,
+) -> None:
+    """Account one audited round into ``stats`` (contract points 3-5 above).
+
+    ``on_offload(decision, model)`` diverts SERVER decisions to the caller
+    (shared-link engines hand them to the fluid uplink / true-trace replay);
+    when it is ``None`` the offload is credited from the plan directly, as
+    the single-stream reference simulator does.
+    """
+    for d in plan.decisions:
+        if d.frame >= horizon or head + d.frame >= n_frames:
+            continue
+        if not d.is_processed():
+            continue
+        m = models[d.model]
+        if d.where is Where.NPU:
+            if d.frame in bad_frames:
+                continue
+            stats.frames_processed += 1
+            stats.accuracy_sum += m.accuracy(stream.r_max, where="npu")
+        elif on_offload is not None:
+            on_offload(d, m)
+        else:
+            if d.frame in bad_frames:
+                continue
+            stats.frames_processed += 1
+            stats.frames_offloaded += 1
+            stats.accuracy_sum += m.accuracy(d.resolution, where="server")
+    stats.frames_missed_deadline += len(bad_frames)

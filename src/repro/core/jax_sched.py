@@ -10,6 +10,16 @@ serving loop can schedule *on device* in microseconds (the paper reports
 
 Both return enough (choice/parent) state to extract the argmax schedule on
 the host; tests assert exact agreement with the Python reference.
+
+The underlying kernels (``_accuracy_dp`` / ``_utility_dp``) are also the
+batched entry points used by :mod:`repro.core.sim_batch`: every dtype is
+pinned explicitly (so tracing inside an ``enable_x64`` context cannot
+silently promote the f32 recurrences to f64 and drift from the reference),
+and both take a *traced* ``n_active`` frame count — frames ``k >= n_active``
+are pass-through no-ops (identity parents, choice ``-1``), which lets a
+``vmap`` over scenarios with different window lengths share one padded
+compiled shape.  Registered policies here declare ``batched=True`` so
+``Session.run_sweep`` can route them through the vectorized backend.
 """
 from __future__ import annotations
 
@@ -39,14 +49,18 @@ def _accuracy_dp(
     arr_bins: jax.Array,  # [n_frames] int32
     dl_bins: jax.Array,  # [n_frames] int32
     start_bin: jax.Array,  # [] int32
+    n_active: jax.Array | int | None = None,  # [] int32; frames >= this are no-ops
     *,
     n_frames: int,
     nbins: int,
 ):
     J = dur.shape[0]
-    bins = jnp.arange(nbins)
+    bins = jnp.arange(nbins, dtype=jnp.int32)
+    if n_active is None:
+        n_active = n_frames
+    n_active = jnp.asarray(n_active, jnp.int32)
 
-    H0 = jnp.full((nbins,), NEG)
+    H0 = jnp.full((nbins,), NEG, dtype=jnp.float32)
     H0 = H0.at[jnp.clip(start_bin, 0, nbins - 1)].set(0.0)
 
     def step(H, k):
@@ -75,15 +89,20 @@ def _accuracy_dp(
             par = jnp.where(valA >= valB, parA, parB)
             return val, par
 
-        vals, pars = jax.vmap(per_model)(jnp.arange(J))  # [J, nbins]
+        vals, pars = jax.vmap(per_model)(jnp.arange(J, dtype=jnp.int32))  # [J, nbins]
         best_j = jnp.argmax(vals, axis=0)  # [nbins]
         Hn = jnp.take_along_axis(vals, best_j[None], axis=0)[0]
         parent = jnp.take_along_axis(pars, best_j[None], axis=0)[0]
         choice = jnp.where(Hn > NEG / 2, best_j.astype(jnp.int32), -1)
         parent = jnp.where(Hn > NEG / 2, parent, -1)
+        # Padded frame (k >= n_active): identity pass-through, no decision.
+        on = k < n_active
+        Hn = jnp.where(on, Hn, H)
+        choice = jnp.where(on, choice, -1)
+        parent = jnp.where(on, parent, bins)
         return Hn, (choice, parent)
 
-    H, (choices, parents) = jax.lax.scan(step, H0, jnp.arange(n_frames))
+    H, (choices, parents) = jax.lax.scan(step, H0, jnp.arange(n_frames, dtype=jnp.int32))
     return H, choices, parents
 
 
@@ -143,6 +162,7 @@ def local_accuracy_dp_jax(
 def _utility_dp(
     t_npu: jax.Array,  # [J]
     acc: jax.Array,  # [J]
+    n_active: jax.Array | int | None = None,  # [] int32; frames >= this are no-ops
     *,
     n_frames: int,
     width: int,
@@ -155,11 +175,15 @@ def _utility_dp(
 ):
     J = t_npu.shape[0]
     BIG_T = 1e9
+    if n_active is None:
+        n_active = n_frames
+    n_active = jnp.asarray(n_active, jnp.int32)
 
-    t0 = jnp.full((width,), BIG_T).at[0].set(jnp.maximum(npu_free, 0.0))
-    u0 = jnp.full((width,), NEG).at[0].set(0.0)
+    t0 = jnp.full((width,), BIG_T, dtype=jnp.float32).at[0].set(jnp.maximum(npu_free, 0.0))
+    u0 = jnp.full((width,), NEG, dtype=jnp.float32).at[0].set(0.0)
     m0 = jnp.zeros((width,), jnp.int32)
     valid0 = jnp.zeros((width,), bool).at[0].set(True)
+    slots = jnp.arange(width, dtype=jnp.int32)
 
     def step(state, k):
         t, u, m, valid = state
@@ -168,8 +192,11 @@ def _utility_dp(
         def proc(j):
             t2 = jnp.maximum(t, arrival) + t_npu[j]
             ok = valid & (t2 <= arrival + deadline + 1e-12)
-            mean_term = (m / (m + 1)) * (u - m / window) + alpha * acc[j] / (m + 1)
-            u2 = mean_term + (m + 1) / window
+            # f32 division pinned explicitly: under enable_x64, i32/i32 would
+            # promote to f64 and drift from the reference recurrence.
+            mf = m.astype(jnp.float32)
+            mean_term = (mf / (mf + 1)) * (u - mf / window) + alpha * acc[j] / (mf + 1)
+            u2 = mean_term + (mf + 1) / window
             return (
                 jnp.where(ok, t2, BIG_T),
                 jnp.where(ok, u2, NEG),
@@ -177,39 +204,82 @@ def _utility_dp(
                 ok,
             )
 
-        pt, pu, pm, pok = jax.vmap(proc)(jnp.arange(J))  # [J, width]
+        pt, pu, pm, pok = jax.vmap(proc)(jnp.arange(J, dtype=jnp.int32))  # [J, width]
         ct = jnp.concatenate([t, pt.reshape(-1)])
         cu = jnp.concatenate([u, pu.reshape(-1)])
         cm = jnp.concatenate([m, pm.reshape(-1)])
-        cok = jnp.concatenate([valid, pok.reshape(-1)])
-        slots = jnp.arange(width)
         cparent = jnp.concatenate([slots, jnp.tile(slots, J)])
         caction = jnp.concatenate(
             [jnp.full((width,), -1, jnp.int32), jnp.repeat(jnp.arange(J, dtype=jnp.int32), width)]
         )
+        cok = jnp.concatenate([valid, pok.reshape(-1)])
         cu = jnp.where(cok, cu, NEG)
         ct = jnp.where(cok, ct, BIG_T)
-        # Pareto prune: sort by (t asc, u desc); keep strictly-rising u.
-        order = jnp.lexsort((-cu, ct))
-        ct, cu, cm, cok = ct[order], cu[order], cm[order], cok[order]
-        cparent, caction = cparent[order], caction[order]
-        run = jax.lax.associative_scan(jnp.maximum, cu)
-        prev_run = jnp.concatenate([jnp.array([NEG]), run[:-1]])
-        keep = cok & (cu > prev_run + 1e-12)
-        # Compact keepers to the front, truncate to width.  Dropped entries
-        # get an out-of-range target; mode="drop" discards them (clamping to
-        # a valid index would clobber kept slots).
-        rank = jnp.cumsum(keep) - 1
-        tgt = jnp.where(keep, rank, len(ct)).astype(jnp.int32)
-        nt = jnp.full((width,), BIG_T).at[tgt].set(ct, mode="drop")
-        nu = jnp.full((width,), NEG).at[tgt].set(cu, mode="drop")
-        nm = jnp.zeros((width,), jnp.int32).at[tgt].set(cm, mode="drop")
-        nok = jnp.zeros((width,), bool).at[tgt].set(True, mode="drop")
-        nparent = jnp.full((width,), -1, jnp.int32).at[tgt].set(cparent, mode="drop")
-        naction = jnp.full((width,), -1, jnp.int32).at[tgt].set(caction, mode="drop")
+        # Pareto prune: sort by (t asc, u desc); keep strictly-rising u —
+        # exactly the permutation jnp.lexsort((-cu, ct)) produced.  This
+        # step runs window-times per scheduling round, and on CPU tuple
+        # sorts and batched scatters are serial, so sweep wall-clock lives
+        # and dies here.  Invalid candidates need no explicit flag past this
+        # point: they carry (BIG_T, NEG) keys, sort strictly after every
+        # valid entry (valid t is bounded by arrival+deadline << BIG_T), and
+        # NEG can never beat the strictly-rising-u running max below.
+        if jax.dtypes.canonicalize_dtype(jnp.int64) == jnp.int64:
+            # x64 (the sim_batch sweep path): two SINGLE-int64 sorts — XLA
+            # CPU's fast path — replace the slow generic tuple comparator.
+            # Each i64 = (order-isomorphic f32 key << 32) | index; the index
+            # doubles as the explicit stable tie-break, so sorting by -cu
+            # then (stably, via carried rank) by ct yields the identical
+            # total order: (ct, -cu, original position).  Original f32 bits
+            # flow through the permutation gather untouched.
+            def okey(x):  # monotone f32 -> int64 in [-2^31, 2^31)
+                b = jax.lax.bitcast_convert_type(x + jnp.float32(0.0), jnp.int32)
+                b = b.astype(jnp.int64)
+                return jnp.where(b >= 0, b, jnp.int64(-2147483649) - b)
+
+            idx64 = jnp.arange(ct.shape[0], dtype=jnp.int64)
+            by_u = jax.lax.sort(((okey(-cu) << 32) | idx64,), num_keys=1)[0]
+            idx_u = (by_u & 0xFFFFFFFF).astype(jnp.int32)
+            by_t = jax.lax.sort(((okey(ct)[idx_u] << 32) | idx64,), num_keys=1)[0]
+            perm = idx_u[(by_t & 0xFFFFFFFF).astype(jnp.int32)]
+        else:
+            # x32 (the per-round reference path, batch of one): a stable
+            # 3-operand sort whose index payload IS the permutation.
+            idx = jnp.arange(ct.shape[0], dtype=jnp.int32)
+            perm = jax.lax.sort((ct, -cu, idx), num_keys=2, is_stable=True)[2]
+        ct, cu, cm = ct[perm], cu[perm], cm[perm]
+        cparent, caction = cparent[perm], caction[perm]
+        run = jax.lax.cummax(cu)
+        prev_run = jnp.concatenate([jnp.array([NEG], dtype=cu.dtype), run[:-1]])
+        keep = cu > prev_run + 1e-12
+        # Compact keepers to the front, truncate to width: the r-th output
+        # slot gathers the r-th keeper (keepers already sit in rank order),
+        # located by searchsorted over the keep-count prefix sum.  Exactly
+        # the slots/fill values of a scatter-with-drop by rank, scatter-free.
+        csum = jnp.cumsum(keep.astype(jnp.int32))
+        pos = jnp.clip(
+            jnp.searchsorted(csum, jnp.arange(1, width + 1, dtype=jnp.int32)),
+            0, ct.shape[0] - 1,
+        )
+        filled = slots < csum[-1]
+        nt = jnp.where(filled, ct[pos], BIG_T)
+        nu = jnp.where(filled, cu[pos], NEG)
+        nm = jnp.where(filled, cm[pos], 0)
+        nok = filled
+        nparent = jnp.where(filled, cparent[pos], -1)
+        naction = jnp.where(filled, caction[pos], -1)
+        # Padded frame (k >= n_active): identity pass-through, no decision.
+        on = k < n_active
+        nt = jnp.where(on, nt, t)
+        nu = jnp.where(on, nu, u)
+        nm = jnp.where(on, nm, m)
+        nok = jnp.where(on, nok, valid)
+        nparent = jnp.where(on, nparent, slots)
+        naction = jnp.where(on, naction, -1)
         return (nt, nu, nm, nok), (nparent, naction, nu)
 
-    state, (parents, actions, us) = jax.lax.scan(step, (t0, u0, m0, valid0), jnp.arange(n_frames))
+    state, (parents, actions, us) = jax.lax.scan(
+        step, (t0, u0, m0, valid0), jnp.arange(n_frames, dtype=jnp.int32)
+    )
     return state, parents, actions, us
 
 
@@ -277,6 +347,7 @@ def local_utility_dp_jax(
         Param.number("grid", 1e-3, doc="DP time grid (s)"),
     ),
     doc="Jitted Max-Accuracy local DP (every window frame on the NPU).",
+    batched=True,
 )
 def plan_round_accuracy(
     models: Sequence[ModelProfile],
@@ -319,6 +390,7 @@ def plan_round_accuracy(
         Param.integer("width", 64, doc="Pareto-front width of the jitted DP"),
     ),
     doc="Jitted Max-Utility local DP (dominance-pruned front, skips allowed).",
+    batched=True,
 )
 def plan_round_utility(
     models: Sequence[ModelProfile],

@@ -87,12 +87,19 @@ class Param:
 
 @dataclass(frozen=True)
 class PolicyEntry:
-    """A registered policy: the plan_round callable plus its parameter schema."""
+    """A registered policy: the plan_round callable plus its parameter schema.
+
+    ``batched=True`` declares that :mod:`repro.core.sim_batch` ships a
+    vectorized (jit+vmap) implementation of this policy's round semantics,
+    so ``Session.run_sweep`` may execute whole scenario grids on device.
+    Policies without the flag always run through the reference Python loop.
+    """
 
     name: str
     fn: Callable[..., Any]
     params: tuple[Param, ...] = ()
     doc: str = ""
+    batched: bool = False
 
     def param(self, name: str) -> Param | None:
         for p in self.params:
@@ -127,19 +134,25 @@ _BUILTINS_LOADED = False
 
 
 def register_policy(
-    name: str, *, params: Sequence[Param] = (), doc: str = ""
+    name: str, *, params: Sequence[Param] = (), doc: str = "", batched: bool = False
 ) -> Callable:
     """Decorator: register ``fn`` as policy ``name`` with a parameter schema.
 
     ``fn`` must follow the plan-round contract:
     ``fn(models, stream, net, *, npu_free, **params) -> RoundPlan``.
+    ``batched=True`` additionally promises a matching vectorized backend in
+    :mod:`repro.core.sim_batch` (golden-tested against this ``fn``).
     """
 
     def deco(fn: Callable) -> Callable:
         if name in _REGISTRY and _REGISTRY[name].fn is not fn:
             raise ValueError(f"policy {name!r} already registered")
         _REGISTRY[name] = PolicyEntry(
-            name=name, fn=fn, params=tuple(params), doc=doc or (fn.__doc__ or "").strip()
+            name=name,
+            fn=fn,
+            params=tuple(params),
+            doc=doc or (fn.__doc__ or "").strip(),
+            batched=batched,
         )
         return fn
 

@@ -61,6 +61,9 @@ class StreamStats:
     elapsed: float = 0.0
     schedule_calls: int = 0
     schedule_time: float = 0.0
+    # NPU busy-seconds, filled by engines that account occupancy on device
+    # (core/sim_batch); 0.0 where untracked (the reference loops).
+    npu_busy_s: float = 0.0
 
     @property
     def mean_accuracy(self) -> float:

@@ -1,0 +1,449 @@
+"""Vectorized fleet-sweep backend: whole scenario grids as ONE tensor program.
+
+The reference simulator (``simulator.simulate``) replays one stream at a
+time in a Python event loop — every figure sweep pays interpreter cost per
+frame per grid point.  This module executes and audits the same round plans
+for a *batch* of scenarios (bandwidth × deadline × fps × policy-param grid
+points) as a single jit+vmap program: per scenario, a ``lax.while_loop``
+over scheduling rounds whose body (a) runs the policy's jitted DP
+(:mod:`repro.core.jax_sched`), (b) backtracks the argmax schedule, and
+(c) applies the shared audit contract of :mod:`repro.core.audit` — all on
+device, returning per-scenario :class:`~repro.core.schedule.StreamStats`
+tensors (accuracy sum, processed/missed counts, NPU occupancy).
+
+Exactness contract (golden-tested in ``tests/test_sim_batch.py``): for every
+scenario in the batch, the returned stats are **bit-identical** to
+``simulate(PolicySpec(name, params).build(), ...)`` — same bin
+discretization, same f32 DP recurrences, same f64 audit arithmetic in the
+same order.  Three mechanisms make that possible:
+
+  * every host-side quantity the reference computes in float64 (bin edges,
+    arrival times, windows, f32 casts of policy params) is precomputed here
+    with the identical numpy expressions;
+  * the only round-coupled quantity, ``npu_free``, is carried on device in
+    float64 — the module runs its programs inside ``jax.experimental
+    .enable_x64`` and the DP kernels pin their own dtypes so the f32
+    recurrences do not silently widen;
+  * fixed shapes come from *padding*, never truncation: windows pad to the
+    batch-max frame count ``W`` (padded frames are identity no-ops in the
+    kernels) and the Max-Accuracy time grid pads to the batch-max bin count
+    (padded bins provably stay ``NEG`` and cannot enter any argmax).
+
+Only policies registered with ``batched=True`` (the local-plan jitted DPs
+``jax_accuracy`` / ``jax_utility``) have a planner here; ``Session
+.run_sweep`` falls back to the reference loop for everything else.  Their
+plans never offload, so ``frames_offloaded`` is always 0 and no network
+state is simulated on device (see docs/simulation.md).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import lru_cache
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from .audit import AUDIT_TOL
+from .jax_sched import NEG, _accuracy_dp, _utility_dp
+from .profiles import ModelProfile, StreamSpec
+from .schedule import StreamStats
+
+__all__ = ["BatchScenario", "batched_policies", "simulate_batch"]
+
+
+@dataclass(frozen=True)
+class BatchScenario:
+    """One grid point as the batched backend sees it: a stream shape, a frame
+    budget, and the policy's *resolved* parameter dict (defaults filled in,
+    e.g. ``PolicySpec(...).resolved``).  Network state is deliberately absent
+    — batched policies are local-only plans and never consult it."""
+
+    stream: StreamSpec = field(default_factory=StreamSpec)
+    n_frames: int = 120
+    params: Mapping[str, Any] = field(default_factory=dict)
+
+
+_PLANNERS: dict[str, Callable[..., list[StreamStats]]] = {}
+
+
+def _planner(name: str):
+    def deco(fn):
+        _PLANNERS[name] = fn
+        return fn
+
+    return deco
+
+
+def batched_policies() -> tuple[str, ...]:
+    """Policy names this backend can execute (mirrors ``batched=True`` in the
+    registry; ``tests/test_sim_batch.py`` asserts the two stay in sync)."""
+    return tuple(sorted(_PLANNERS))
+
+
+def simulate_batch(
+    policy: str,
+    models: Sequence[ModelProfile],
+    scenarios: Sequence[BatchScenario],
+    *,
+    strict: bool = True,
+) -> list[StreamStats]:
+    """Run ``policy`` over every scenario in one compiled program.
+
+    Returns one audited :class:`StreamStats` per scenario, in order,
+    bit-identical to the reference ``simulate`` loop.  Raises ``ValueError``
+    for policies without a batched planner — callers that want a silent
+    fallback should route through ``Session.run_sweep`` instead.
+    """
+    fn = _PLANNERS.get(policy)
+    if fn is None:
+        raise ValueError(
+            f"policy {policy!r} has no batched backend; available: {batched_policies()}"
+        )
+    if not scenarios:
+        return []
+    return fn(list(models), list(scenarios), bool(strict))
+
+
+# ---------------------------------------------------------------------------
+# Shared host-side precomputation (float64 numpy — mirrors the reference
+# wrappers in jax_sched expression by expression).
+# ---------------------------------------------------------------------------
+
+
+def _window_frames(stream: StreamSpec, params: Mapping[str, Any]) -> int:
+    """Mirror of the plan-round wrappers' window choice."""
+    wf = params.get("window_frames")
+    if wf is not None:
+        return int(wf)
+    return max(int(np.floor(stream.deadline / stream.gamma)), 1)
+
+
+# Scenario grouping: one monolithic batch would force every lane to pay the
+# batch-max window, bin count, AND round count (a vmapped while_loop runs
+# until the deepest lane finishes).  Scenarios are instead partitioned into
+# shape-homogeneous groups keyed on a *quantized* window size (and the
+# Max-Accuracy bin count quantized to multiples of 128), which bounds
+# in-group padding waste by ~2x while keeping the jit cache small and stable
+# across sweeps.  Padding is provably inert (see module docstring), so the
+# partition cannot change any result — only wall-clock.
+
+_W_LADDER = (1, 2, 3, 4, 5, 6, 7, 8, 10, 12, 14, 16, 20, 24, 28, 32, 40, 48, 64, 96, 128)
+
+
+def _quant_w(n: int) -> int:
+    for w in _W_LADDER:
+        if n <= w:
+            return w
+    return int(2 ** np.ceil(np.log2(n)))
+
+
+def _quant_bins(n: int, q: int = 128) -> int:
+    return int(q * np.ceil(max(n, 1) / q))
+
+
+def _stitch(scenarios, key_fn, run_group) -> list[StreamStats]:
+    """Partition ``scenarios`` by ``key_fn``, run each group, reassemble in
+    the original order."""
+    groups: dict[Any, list[int]] = {}
+    for i, s in enumerate(scenarios):
+        groups.setdefault(key_fn(s), []).append(i)
+    stats: list[StreamStats | None] = [None] * len(scenarios)
+    for key in sorted(groups):
+        idx = groups[key]
+        for i, st in zip(idx, run_group(key, [scenarios[i] for i in idx])):
+            stats[i] = st
+    return stats  # type: ignore[return-value]
+
+
+@dataclass
+class _Common:
+    """Per-group arrays shared by both planners."""
+
+    B: int
+    J: int
+    W: int  # padded window (quantized group maximum)
+    n_active: np.ndarray  # [B] i32 real window per scenario
+    gamma: np.ndarray  # [B] f64
+    deadline: np.ndarray  # [B] f64
+    n_frames: np.ndarray  # [B] i32
+    arrivals: np.ndarray  # [B, W] f64, k * gamma
+    t_npu64: np.ndarray  # [J] f64 (inf for server-only models)
+    acc_dp32: np.ndarray  # [J] f32 — the DP's accuracy table (raw max key)
+    acc_stat64: np.ndarray  # [B, J] f64 — audit accuracy at the stream's r_max
+
+
+def _common(
+    models: list[ModelProfile], scenarios: list[BatchScenario], W: int | None = None
+) -> _Common:
+    B, J = len(scenarios), len(models)
+    n_active = np.array([_window_frames(s.stream, s.params) for s in scenarios], np.int32)
+    W = int(n_active.max()) if W is None else int(W)
+    gamma = np.array([s.stream.gamma for s in scenarios], np.float64)
+    deadline = np.array([s.stream.deadline for s in scenarios], np.float64)
+    n_frames = np.array([s.n_frames for s in scenarios], np.int32)
+    arrivals = np.arange(W, dtype=np.float64)[None, :] * gamma[:, None]
+    t_npu64 = np.array([m.t_npu for m in models], np.float64)
+    acc_dp32 = np.array(
+        [m.acc_npu[max(m.acc_npu)] if m.acc_npu else 0.0 for m in models], np.float32
+    )
+    acc_stat64 = np.array(
+        [[m.accuracy(s.stream.r_max, where="npu") for m in models] for s in scenarios],
+        np.float64,
+    )
+    return _Common(B, J, W, n_active, gamma, deadline, n_frames, arrivals,
+                   t_npu64, acc_dp32, acc_stat64)
+
+
+def _collect(c: _Common, out, wall_s: float) -> list[StreamStats]:
+    acc_sum, proc, miss, rounds, npu_busy = (np.asarray(a) for a in out)
+    # The whole group schedules in one device program; apportion its wall
+    # time by round count so schedule_time/schedule_calls stays the honest
+    # amortized per-round cost (what figure rows report as us_per_call).
+    total_rounds = max(int(rounds.sum()), 1)
+    return [
+        StreamStats(
+            frames_total=int(c.n_frames[b]),
+            frames_processed=int(proc[b]),
+            frames_missed_deadline=int(miss[b]),
+            frames_offloaded=0,  # batched policies are local-only plans
+            accuracy_sum=float(acc_sum[b]),
+            elapsed=float(c.n_frames[b] * c.gamma[b]),
+            schedule_calls=int(rounds[b]),
+            schedule_time=wall_s * float(rounds[b]) / total_rounds,
+            npu_busy_s=float(npu_busy[b]),
+        )
+        for b in range(c.B)
+    ]
+
+
+def _audit_scan(*, head, n_frames, n_active, arrivals, deadline, t_npu64, acc_stat,
+                picks, gate, free0, acc_sum, proc, miss, npu_s, W, J, strict):
+    """On-device rendering of the :mod:`repro.core.audit` contract for a
+    local-only round: sequential f64 fold over the (padded) window in frame
+    order, so accuracy accumulates exactly as the reference loop's repeated
+    ``+=``.  ``gate[k]`` says whether frame ``k`` really executes."""
+
+    def au(carry, xs):
+        free, a_s, pr, ms, nb = carry
+        k, pick, act = xs
+        j = jnp.clip(pick, 0, J - 1)
+        arr_k = arrivals[k]
+        start = jnp.maximum(free, arr_k)
+        finish = start + t_npu64[j]
+        if strict:
+            bad = act & (finish > (arr_k + deadline) + AUDIT_TOL)
+        else:
+            bad = jnp.zeros_like(act)
+        in_range = (head + k) < n_frames
+        take = act & (~bad) & in_range
+        a_s = a_s + jnp.where(take, acc_stat[j], 0.0)
+        pr = pr + take.astype(jnp.int32)
+        ms = ms + bad.astype(jnp.int32)  # missed counts even past-stream frames
+        nb = nb + jnp.where(act, t_npu64[j], 0.0)
+        free = jnp.where(act, finish, free)
+        return (free, a_s, pr, ms, nb), None
+
+    ks = jnp.arange(W, dtype=jnp.int32)
+    carry, _ = jax.lax.scan(au, (free0, acc_sum, proc, miss, npu_s), (ks, picks, gate))
+    return carry
+
+
+# ---------------------------------------------------------------------------
+# jax_accuracy: Max-Accuracy local DP over a (padded) time-bin grid.
+# ---------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=None)
+def _accuracy_program(W: int, NBINS: int, J: int, strict: bool):
+    def one(gamma, deadline, grid, n_active, nbins_real, n_frames,
+            arr_bins, dl_bins, dur, arrivals, acc_stat, t_npu64, acc_dp32):
+        def cond(c):
+            return c[0] < n_frames
+
+        def body(c):
+            head, busy, acc_sum, proc, miss, rounds, npu_s = c
+            active = head < n_frames  # lane gating under vmap-of-while
+            t0 = head.astype(jnp.float64) * gamma
+            npu_free = jnp.maximum(0.0, busy - t0)
+            # Reference: int(np.ceil(max(npu_free, 0.0) / grid)), clipped to
+            # the scenario's REAL bin count (not the padded one) — the clip
+            # target is observable when npu_free overruns the horizon.
+            start_bin = jnp.ceil(jnp.maximum(npu_free, 0.0) / grid).astype(jnp.int32)
+            start_bin = jnp.clip(start_bin, 0, nbins_real - 1)
+            H, choices, parents = _accuracy_dp(
+                dur, acc_dp32, arr_bins, dl_bins, start_bin, n_active,
+                n_frames=W, nbins=NBINS,
+            )
+            feasible = jnp.max(H) > NEG / 2
+            b0 = jnp.argmax(H).astype(jnp.int32)
+
+            def bt(b, k):
+                bc = jnp.clip(b, 0, NBINS - 1)
+                pick = choices[k, bc]
+                return jnp.where(pick >= 0, parents[k, bc], b), pick
+
+            _, picks_rev = jax.lax.scan(
+                bt, b0, jnp.arange(W - 1, -1, -1, dtype=jnp.int32)
+            )
+            picks = picks_rev[::-1]
+
+            gate = active & feasible & (jnp.arange(W, dtype=jnp.int32) < n_active)
+            free0 = jnp.maximum(npu_free, 0.0)
+            free_end, acc_sum, proc, miss, npu_s = _audit_scan(
+                head=head, n_frames=n_frames, n_active=n_active, arrivals=arrivals,
+                deadline=deadline, t_npu64=t_npu64, acc_stat=acc_stat, picks=picks,
+                gate=gate, free0=free0, acc_sum=acc_sum, proc=proc, miss=miss,
+                npu_s=npu_s, W=W, J=J, strict=strict,
+            )
+            # Infeasible window: the reference emits a horizon-1 SKIP round
+            # that leaves the NPU carry untouched.
+            busy_until = jnp.where(feasible, free_end, npu_free)
+            horizon = jnp.where(feasible, n_active, 1)
+            head = jnp.where(active, head + horizon, head)
+            busy = jnp.where(active, t0 + busy_until, busy)
+            rounds = jnp.where(active, rounds + 1, rounds)
+            return head, busy, acc_sum, proc, miss, rounds, npu_s
+
+        init = (
+            jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float64),
+            jnp.zeros((), jnp.float64), jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.float64),
+        )
+        out = jax.lax.while_loop(cond, body, init)
+        return out[2], out[3], out[4], out[5], out[6]
+
+    return jax.jit(jax.vmap(
+        one, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, None, None)
+    ))
+
+
+@_planner("jax_accuracy")
+def _run_accuracy(models, scenarios, strict):
+    def run_group(W, group):
+        c = _common(models, group, W)
+        grid = np.array([float(s.params["grid"]) for s in group], np.float64)
+        # Bin arithmetic in f64 on the host — the same numpy expressions as
+        # local_accuracy_dp_jax, vectorized over the batch.
+        arr_bins = np.ceil(c.arrivals / grid[:, None]).astype(np.int32)
+        dl_bins = np.floor((c.arrivals + c.deadline[:, None]) / grid[:, None]).astype(np.int32)
+        horizon_t = (c.n_active.astype(np.float64) - 1.0) * c.gamma + c.deadline
+        nbins_real = (np.ceil(horizon_t / grid) + 2).astype(np.int32)
+        NBINS = _quant_bins(int(nbins_real.max()))
+        # inf (server-only) and over-horizon durations clamp to NBINS: both
+        # are unreachable in-bin exactly as the reference's raw values are.
+        with np.errstate(invalid="ignore"):
+            dur_f = np.ceil(c.t_npu64[None, :] / grid[:, None])
+        dur = np.where(np.isfinite(dur_f), np.minimum(dur_f, NBINS), NBINS).astype(np.int32)
+        t0 = time.perf_counter()
+        with enable_x64():
+            out = _accuracy_program(c.W, NBINS, c.J, strict)(
+                c.gamma, c.deadline, grid, c.n_active, nbins_real, c.n_frames,
+                arr_bins, dl_bins, dur, c.arrivals, c.acc_stat64,
+                c.t_npu64, c.acc_dp32,
+            )
+            out = [np.asarray(a) for a in out]
+        return _collect(c, out, time.perf_counter() - t0)
+
+    return _stitch(
+        scenarios, lambda s: _quant_w(_window_frames(s.stream, s.params)), run_group
+    )
+
+
+# ---------------------------------------------------------------------------
+# jax_utility: Max-Utility Pareto-front DP (skips allowed).
+# ---------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=None)
+def _utility_program(W: int, width: int, J: int, strict: bool):
+    def one(gamma, deadline, n_active, n_frames, g32, d32, a32, w32,
+            arrivals, acc_stat, t_npu64, t_npu32, acc_dp32):
+        def cond(c):
+            return c[0] < n_frames
+
+        def body(c):
+            head, busy, acc_sum, proc, miss, rounds, npu_s = c
+            active = head < n_frames
+            t0 = head.astype(jnp.float64) * gamma
+            npu_free = jnp.maximum(0.0, busy - t0)
+            (_, u, _, _), parents, actions, _ = _utility_dp(
+                t_npu32, acc_dp32, n_active,
+                n_frames=W, width=width, gamma=g32, deadline=d32, alpha=a32,
+                npu_free=npu_free.astype(jnp.float32),
+                first_arrival=jnp.float32(0.0), window=w32,
+            )
+            slot0 = jnp.argmax(u).astype(jnp.int32)
+
+            def bt(s, k):
+                ok = s >= 0
+                sc = jnp.clip(s, 0, width - 1)
+                pick = jnp.where(ok, actions[k, sc], -1)
+                return jnp.where(ok, parents[k, sc], s), pick
+
+            _, picks_rev = jax.lax.scan(
+                bt, slot0, jnp.arange(W - 1, -1, -1, dtype=jnp.int32)
+            )
+            picks = picks_rev[::-1]
+
+            gate = active & (picks >= 0)  # only picked frames execute; rest SKIP
+            free0 = jnp.maximum(npu_free, 0.0)
+            free_end, acc_sum, proc, miss, npu_s = _audit_scan(
+                head=head, n_frames=n_frames, n_active=n_active, arrivals=arrivals,
+                deadline=deadline, t_npu64=t_npu64, acc_stat=acc_stat, picks=picks,
+                gate=gate, free0=free0, acc_sum=acc_sum, proc=proc, miss=miss,
+                npu_s=npu_s, W=W, J=J, strict=strict,
+            )
+            head = jnp.where(active, head + n_active, head)  # horizon is always n
+            busy = jnp.where(active, t0 + free_end, busy)
+            rounds = jnp.where(active, rounds + 1, rounds)
+            return head, busy, acc_sum, proc, miss, rounds, npu_s
+
+        init = (
+            jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float64),
+            jnp.zeros((), jnp.float64), jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.float64),
+        )
+        out = jax.lax.while_loop(cond, body, init)
+        return out[2], out[3], out[4], out[5], out[6]
+
+    return jax.jit(jax.vmap(
+        one, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0, 0, None, None, None)
+    ))
+
+
+@_planner("jax_utility")
+def _run_utility(models, scenarios, strict):
+    # ``width`` is a compiled Pareto-front shape, so it joins the group key
+    # (a width axis in a sweep grid costs one compile per distinct value).
+    def run_group(key, group):
+        W, width = key
+        c = _common(models, group, W)
+        alpha = np.array([float(s.params["alpha"]) for s in group], np.float64)
+        # The f32 casts the reference wrapper performs, precomputed in bulk.
+        g32 = c.gamma.astype(np.float32)
+        d32 = c.deadline.astype(np.float32)
+        a32 = alpha.astype(np.float32)
+        window = np.maximum(c.n_active.astype(np.float64) * c.gamma, c.gamma)
+        w32 = window.astype(np.float32)
+        t_npu32 = c.t_npu64.astype(np.float32)
+        t0 = time.perf_counter()
+        with enable_x64():
+            out = _utility_program(c.W, width, c.J, strict)(
+                c.gamma, c.deadline, c.n_active, c.n_frames,
+                g32, d32, a32, w32, c.arrivals, c.acc_stat64,
+                c.t_npu64, t_npu32, c.acc_dp32,
+            )
+            out = [np.asarray(a) for a in out]
+        return _collect(c, out, time.perf_counter() - t0)
+
+    return _stitch(
+        scenarios,
+        lambda s: (_quant_w(_window_frames(s.stream, s.params)), int(s.params["width"])),
+        run_group,
+    )

@@ -23,8 +23,9 @@ import time
 from dataclasses import dataclass
 from typing import Callable, Protocol, Sequence
 
+from .audit import apply_round, audit_round
 from .profiles import ModelProfile, NetworkState, StreamSpec
-from .schedule import RoundPlan, StreamStats, Where, validate_plan
+from .schedule import RoundPlan, StreamStats
 
 
 class Policy(Protocol):
@@ -78,7 +79,12 @@ def simulate(
     *,
     strict: bool = True,
 ) -> StreamStats:
-    """Run ``policy`` over ``n_frames`` frames; return audited stream stats."""
+    """Run ``policy`` over ``n_frames`` frames; return audited stream stats.
+
+    The audit semantics (what validates, what scores, what counts missed)
+    live in :mod:`repro.core.audit` and are shared with the vectorized
+    ``sim_batch`` backend — this loop is the reference implementation.
+    """
     stats = StreamStats(frames_total=n_frames, elapsed=n_frames * stream.gamma)
     gamma = stream.gamma
     head = 0
@@ -91,26 +97,19 @@ def simulate(
         stats.schedule_time += time.perf_counter() - wall
         stats.schedule_calls += 1
 
-        horizon = max(plan.horizon, 1)
-        errors = validate_plan(plan, gamma=gamma, deadline=stream.deadline) if strict else []
-        bad_frames = {e.frame for e in errors}
-
-        for d in plan.decisions:
-            if d.frame >= horizon or head + d.frame >= n_frames:
-                continue
-            if not d.is_processed() or d.frame in bad_frames:
-                continue
-            m = models[d.model]
-            acc = (
-                m.accuracy(d.resolution, where="server")
-                if d.where is Where.SERVER
-                else m.accuracy(stream.r_max, where="npu")
-            )
-            stats.frames_processed += 1
-            if d.where is Where.SERVER:
-                stats.frames_offloaded += 1
-            stats.accuracy_sum += acc
-        stats.frames_missed_deadline += len(bad_frames)
+        horizon, bad_frames = audit_round(
+            plan, gamma=gamma, deadline=stream.deadline, strict=strict
+        )
+        apply_round(
+            stats,
+            plan,
+            models=models,
+            stream=stream,
+            head=head,
+            n_frames=n_frames,
+            horizon=horizon,
+            bad_frames=bad_frames,
+        )
         npu_busy_abs = t0 + plan.npu_busy_until
         head += horizon
     return stats
@@ -125,8 +124,16 @@ def make_policy(name: str, *, alpha: float | None = None, **kw) -> Policy:
     swallowed.  ``alpha=None`` is dropped before validation because the
     legacy signature passed it unconditionally.
     """
+    import warnings
+
     from .registry import PolicySpec
 
+    warnings.warn(
+        "make_policy() is deprecated; construct policies with "
+        "repro.core.registry.PolicySpec(name, params) instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     params = dict(kw)
     if alpha is not None:
         params["alpha"] = alpha
@@ -358,48 +365,45 @@ def simulate_multi(
         s.schedule_time += time.perf_counter() - wall
         s.schedule_calls += 1
 
-        horizon = max(plan.horizon, 1)
-        npu_only = RoundPlan(
-            decisions=[d for d in plan.decisions if d.where is Where.NPU],
-            horizon=horizon,
+        horizon, bad_frames = audit_round(
+            plan,
+            gamma=client.stream.gamma,
+            deadline=client.stream.deadline,
+            strict=strict,
+            npu_only=True,
         )
-        errors = (
-            validate_plan(npu_only, gamma=client.stream.gamma, deadline=client.stream.deadline)
-            if strict
-            else []
-        )
-        bad_frames = {e.frame for e in errors}
 
-        for d in plan.decisions:
-            if d.frame >= horizon or head[cid] + d.frame >= n_frames:
-                continue
-            if not d.is_processed():
-                continue
-            m = client.models[d.model]
-            if d.where is Where.NPU:
-                if d.frame in bad_frames:
-                    continue
-                s.frames_processed += 1
-                s.accuracy_sum += m.accuracy(client.stream.r_max, where="npu")
-            else:  # SERVER: hand to the shared link; audited on completion.
-                scheduler.register(cid, grant, t=t0, server_s=m.t_server)
-                uploads.append(
-                    _Upload(
-                        client_id=cid,
-                        bits_left=client.stream.frame_bytes(d.resolution) * 8.0,
-                        weight=max(client.weight, _EPS),
-                        rate_cap=grant if scheduler.policy != "fifo" else float("inf"),
-                        deadline_abs=t0 + d.frame * client.stream.gamma + client.stream.deadline,
-                        accuracy=m.accuracy(d.resolution, where="server"),
-                        t_server=m.t_server,
-                        rtt=net_full.rtt,
-                        # The plan's start is round-relative; a frame cannot
-                        # transmit before it exists (matters for policies that
-                        # offload non-head frames, e.g. DeepDecision).
-                        start_at=t0 + max(d.start, 0.0),
-                    )
+        def offload(d, m, *, cid=cid, client=client, t0=t0, grant=grant, rtt=net_full.rtt):
+            # SERVER: hand to the shared link; audited on completion.
+            scheduler.register(cid, grant, t=t0, server_s=m.t_server)
+            uploads.append(
+                _Upload(
+                    client_id=cid,
+                    bits_left=client.stream.frame_bytes(d.resolution) * 8.0,
+                    weight=max(client.weight, _EPS),
+                    rate_cap=grant if scheduler.policy != "fifo" else float("inf"),
+                    deadline_abs=t0 + d.frame * client.stream.gamma + client.stream.deadline,
+                    accuracy=m.accuracy(d.resolution, where="server"),
+                    t_server=m.t_server,
+                    rtt=rtt,
+                    # The plan's start is round-relative; a frame cannot
+                    # transmit before it exists (matters for policies that
+                    # offload non-head frames, e.g. DeepDecision).
+                    start_at=t0 + max(d.start, 0.0),
                 )
-        s.frames_missed_deadline += len(bad_frames)
+            )
+
+        apply_round(
+            s,
+            plan,
+            models=client.models,
+            stream=client.stream,
+            head=head[cid],
+            n_frames=n_frames,
+            horizon=horizon,
+            bad_frames=bad_frames,
+            on_offload=offload,
+        )
         npu_busy_abs[cid] = t0 + plan.npu_busy_until
         head[cid] += horizon
 

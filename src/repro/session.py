@@ -11,6 +11,9 @@ of the four execution engines behind a uniform :class:`RunReport`:
     run_online   the OnlineController with *estimated* bandwidth, audited
                  against the true trace (the deployable configuration)
     run_serving  real JAX models behind the controller (launch/serve stack)
+    run_sweep    a whole (bandwidth x deadline x fps x fleet x policy-param)
+                 grid in one call — vectorized on device for ``batched=True``
+                 policies, reference loop otherwise (docs/simulation.md)
 
 Quickstart::
 
@@ -32,17 +35,21 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import itertools
 import json
+import logging
 import sys
 import time
 from dataclasses import dataclass, field
-from typing import Any, Mapping, Sequence
+from typing import Any, Iterator, Mapping, Sequence
 
+from .core import sim_batch
+from .core.audit import AUDIT_TOL, apply_round, audit_round
 from .core.controller import BandwidthEstimator, OnlineController
 from .core.edge_server import ALLOCATION_POLICIES, EdgeServerScheduler, make_fleet
 from .core.profiles import PAPER_MODELS, ModelProfile, StreamSpec
-from .core.registry import PolicySpec, available_policies
-from .core.schedule import StreamStats, Where, validate_plan
+from .core.registry import PolicySpec, available_policies, get_policy
+from .core.schedule import StreamStats
 from .core.simulator import Trace, simulate, simulate_multi
 
 __all__ = [
@@ -50,10 +57,14 @@ __all__ = [
     "RunReport",
     "ScenarioSpec",
     "Session",
+    "SweepGrid",
+    "SweepPoint",
+    "SweepReport",
     "TraceSpec",
 ]
 
 _PRESET_MODELS: dict[str, ModelProfile] = {m.name: m for m in PAPER_MODELS}
+_LOG = logging.getLogger("repro.session")
 
 
 # ---------------------------------------------------------------------------
@@ -332,6 +343,233 @@ class RunReport:
 
 
 # ---------------------------------------------------------------------------
+# Sweeps: a declarative grid over one base scenario
+# ---------------------------------------------------------------------------
+
+
+def _axis_values(name: str, values: Any) -> tuple:
+    """Normalize one grid axis to a tuple, rejecting scalars and strings —
+    ``"fifo"`` must not silently become the 4-point axis ('f','i','f','o')."""
+    if isinstance(values, (str, bytes)) or not hasattr(values, "__iter__"):
+        raise ValueError(
+            f"SweepGrid axis {name!r} must be a list of values, got {values!r}"
+        )
+    return tuple(values)
+
+
+@dataclass(frozen=True)
+class SweepGrid:
+    """A cartesian scenario grid over one base :class:`ScenarioSpec`.
+
+    Scenario axes override spec fields; ``params`` axes override the policy's
+    parameters (e.g. ``{"alpha": (50.0, 200.0)}``).  Empty axes are simply
+    absent from the product — an all-empty grid is the single base scenario.
+    JSON round-trippable like every other spec in this module.
+    """
+
+    bandwidth_mbps: tuple[float, ...] = ()
+    deadline_ms: tuple[float, ...] = ()
+    fps: tuple[float, ...] = ()
+    rtt_ms: tuple[float, ...] = ()
+    n_clients: tuple[int, ...] = ()
+    allocation: tuple[str, ...] = ()
+    params: Mapping[str, tuple] = field(default_factory=dict)
+
+    SCENARIO_AXES = ("bandwidth_mbps", "deadline_ms", "fps", "rtt_ms", "n_clients", "allocation")
+
+    def __post_init__(self) -> None:
+        for name in self.SCENARIO_AXES:
+            object.__setattr__(self, name, _axis_values(name, getattr(self, name)))
+        if not isinstance(self.params, Mapping):
+            raise ValueError(
+                f"SweepGrid params must be a mapping of axis name -> values, "
+                f"got {self.params!r}"
+            )
+        params = {str(k): _axis_values(k, v) for k, v in self.params.items()}
+        for k in params:
+            if k in self.SCENARIO_AXES:
+                raise ValueError(f"param axis {k!r} shadows a scenario axis")
+            if not params[k]:
+                raise ValueError(f"param axis {k!r} is empty")
+        object.__setattr__(self, "params", params)
+
+    def axes(self) -> list[tuple[str, tuple]]:
+        """Non-empty (name, values) axes, scenario axes first."""
+        out = [(n, getattr(self, n)) for n in self.SCENARIO_AXES if getattr(self, n)]
+        out.extend(self.params.items())
+        return out
+
+    def points(self) -> list[dict[str, Any]]:
+        """Every grid point as an override dict, in row-major axis order."""
+        axes = self.axes()
+        if not axes:
+            return [{}]
+        names = [n for n, _ in axes]
+        return [
+            dict(zip(names, combo))
+            for combo in itertools.product(*(vals for _, vals in axes))
+        ]
+
+    def __len__(self) -> int:
+        n = 1
+        for _, vals in self.axes():
+            n *= len(vals)
+        return n
+
+    def to_json(self) -> dict[str, Any]:
+        out: dict[str, Any] = {
+            n: list(getattr(self, n)) for n in self.SCENARIO_AXES if getattr(self, n)
+        }
+        if self.params:
+            out["params"] = {k: list(v) for k, v in self.params.items()}
+        return out
+
+    @staticmethod
+    def from_json(data: Mapping[str, Any] | str) -> "SweepGrid":
+        if isinstance(data, str):
+            data = json.loads(data)
+        if not isinstance(data, Mapping):
+            raise ValueError(f"not a SweepGrid payload: {data!r}")
+        unknown = set(data) - set(SweepGrid.SCENARIO_AXES) - {"params"}
+        if unknown:
+            raise ValueError(
+                f"unknown SweepGrid axes {sorted(unknown)}; "
+                f"scenario axes: {SweepGrid.SCENARIO_AXES} (policy params go under 'params')"
+            )
+        return SweepGrid(  # axis-shape validation happens in __post_init__
+            **{n: data.get(n, ()) for n in SweepGrid.SCENARIO_AXES},
+            params=data.get("params") or {},
+        )
+
+
+def _apply_point(base: ScenarioSpec, pt: Mapping[str, Any]) -> ScenarioSpec:
+    """Materialize one grid point: base spec + axis overrides."""
+    stream_kw: dict[str, Any] = {}
+    if "deadline_ms" in pt:
+        stream_kw["deadline"] = float(pt["deadline_ms"]) / 1e3
+    if "fps" in pt:
+        stream_kw["fps"] = float(pt["fps"])
+    stream = dataclasses.replace(base.stream, **stream_kw) if stream_kw else base.stream
+
+    trace = base.trace
+    if "bandwidth_mbps" in pt:  # a bandwidth axis implies a constant trace
+        trace = TraceSpec(
+            kind="constant",
+            mbps=float(pt["bandwidth_mbps"]),
+            rtt_ms=float(pt.get("rtt_ms", base.trace.rtt_ms)),
+        )
+    elif "rtt_ms" in pt:
+        trace = dataclasses.replace(trace, rtt_ms=float(pt["rtt_ms"]))
+
+    fleet = base.fleet
+    if "n_clients" in pt or "allocation" in pt:
+        fleet = fleet if fleet is not None else FleetSpec()
+        if "n_clients" in pt and (fleet.weights is not None or fleet.priorities is not None):
+            raise ValueError(
+                "an n_clients grid axis cannot resize a fleet with explicit "
+                "per-client weights/priorities"
+            )
+        fleet_kw: dict[str, Any] = {}
+        if "n_clients" in pt:
+            fleet_kw["n_clients"] = int(pt["n_clients"])
+        if "allocation" in pt:
+            fleet_kw["allocation"] = str(pt["allocation"])
+        fleet = dataclasses.replace(fleet, **fleet_kw)
+
+    param_over = {k: v for k, v in pt.items() if k not in SweepGrid.SCENARIO_AXES}
+    policy = base.policy
+    if param_over:
+        policy = PolicySpec(policy.name, {**policy.params, **param_over})
+
+    return dataclasses.replace(
+        base, policy=policy, stream=stream, trace=trace, fleet=fleet
+    )
+
+
+@dataclass
+class SweepPoint:
+    """One audited grid point: its axis overrides + per-stream stats."""
+
+    overrides: dict[str, Any]
+    streams: list[StreamStats]
+    meta: dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def stats(self) -> StreamStats:
+        return self.streams[0]
+
+    @property
+    def aggregate_accuracy(self) -> float:
+        total = sum(s.frames_total for s in self.streams)
+        return sum(s.accuracy_sum for s in self.streams) / total if total else 0.0
+
+    @property
+    def max_miss_rate(self) -> float:
+        return max(
+            (s.frames_missed_deadline / s.frames_total for s in self.streams if s.frames_total),
+            default=0.0,
+        )
+
+    def to_json(self) -> dict[str, Any]:
+        return {
+            "overrides": dict(self.overrides),
+            "streams": [dataclasses.asdict(s) for s in self.streams],
+            "meta": self.meta,
+        }
+
+    @staticmethod
+    def from_json(data: Mapping[str, Any]) -> "SweepPoint":
+        return SweepPoint(
+            overrides=dict(data.get("overrides") or {}),
+            streams=[StreamStats(**s) for s in data.get("streams") or []],
+            meta=dict(data.get("meta") or {}),
+        )
+
+
+@dataclass
+class SweepReport:
+    """What ``Session.run_sweep`` returns: the base spec, the grid, which
+    engine actually ran (``backend``), and one :class:`SweepPoint` per grid
+    point in ``grid.points()`` order.  ``to_json``/``from_json`` round-trip
+    losslessly (property-tested), so a sweep is a replayable artifact."""
+
+    base: ScenarioSpec
+    grid: SweepGrid
+    backend: str  # "reference" | "batched" — the engine that actually ran
+    points: list[SweepPoint]
+    meta: dict[str, Any] = field(default_factory=dict)
+
+    def __len__(self) -> int:
+        return len(self.points)
+
+    def __iter__(self) -> Iterator[SweepPoint]:
+        return iter(self.points)
+
+    def to_json(self) -> dict[str, Any]:
+        return {
+            "base": self.base.to_json(),
+            "grid": self.grid.to_json(),
+            "backend": self.backend,
+            "points": [p.to_json() for p in self.points],
+            "meta": self.meta,
+        }
+
+    @staticmethod
+    def from_json(data: Mapping[str, Any] | str) -> "SweepReport":
+        if isinstance(data, str):
+            data = json.loads(data)
+        if not isinstance(data, Mapping) or "base" not in data or "grid" not in data:
+            raise ValueError("not a SweepReport payload (missing 'base'/'grid')")
+        return SweepReport(
+            base=ScenarioSpec.from_json(data["base"]),
+            grid=SweepGrid.from_json(data["grid"]),
+            backend=str(data.get("backend", "reference")),
+            points=[SweepPoint.from_json(p) for p in data.get("points") or []],
+            meta=dict(data.get("meta") or {}),
+        )
+
+
+# ---------------------------------------------------------------------------
 # Session facade
 # ---------------------------------------------------------------------------
 
@@ -428,43 +666,39 @@ class Session:
             plan = controller.next_plan(head)
             stats.schedule_time += time.perf_counter() - wall
             stats.schedule_calls += 1
-            horizon = max(plan.horizon, 1)
 
-            npu_only = dataclasses.replace(
-                plan, decisions=[d for d in plan.decisions if d.where is Where.NPU]
+            horizon, bad = audit_round(
+                plan, gamma=gamma, deadline=deadline, strict=spec.strict, npu_only=True
             )
-            errors = (
-                validate_plan(npu_only, gamma=gamma, deadline=deadline) if spec.strict else []
-            )
-            bad = {e.frame for e in errors}
 
-            for d in plan.decisions:
-                if d.frame >= horizon or head + d.frame >= spec.n_frames:
-                    continue
-                if not d.is_processed():
-                    continue
-                m = models[d.model]
-                if d.where is Where.NPU:
-                    if d.frame in bad:
-                        continue
+            def offload(d, m, *, t0=t0, true_net=true_net):
+                nonlocal net_free_abs
+                arrival_abs = t0 + d.frame * gamma
+                nbytes = stream.frame_bytes(d.resolution)
+                t_up = true_net.upload_time(nbytes)
+                start = max(net_free_abs, t0 + max(d.start, 0.0))
+                finish = start + t_up + true_net.rtt + m.t_server
+                net_free_abs = start + t_up
+                controller.report_upload(nbytes, t_up)
+                controller.report_rtt(true_net.rtt)
+                if finish <= arrival_abs + deadline + AUDIT_TOL:
                     stats.frames_processed += 1
-                    stats.accuracy_sum += m.accuracy(stream.r_max, where="npu")
+                    stats.frames_offloaded += 1
+                    stats.accuracy_sum += m.accuracy(d.resolution, where="server")
                 else:
-                    arrival_abs = t0 + d.frame * gamma
-                    nbytes = stream.frame_bytes(d.resolution)
-                    t_up = true_net.upload_time(nbytes)
-                    start = max(net_free_abs, t0 + max(d.start, 0.0))
-                    finish = start + t_up + true_net.rtt + m.t_server
-                    net_free_abs = start + t_up
-                    controller.report_upload(nbytes, t_up)
-                    controller.report_rtt(true_net.rtt)
-                    if finish <= arrival_abs + deadline + 1e-9:
-                        stats.frames_processed += 1
-                        stats.frames_offloaded += 1
-                        stats.accuracy_sum += m.accuracy(d.resolution, where="server")
-                    else:
-                        stats.frames_missed_deadline += 1
-            stats.frames_missed_deadline += len(bad)
+                    stats.frames_missed_deadline += 1
+
+            apply_round(
+                stats,
+                plan,
+                models=models,
+                stream=stream,
+                head=head,
+                n_frames=spec.n_frames,
+                horizon=horizon,
+                bad_frames=bad,
+                on_offload=offload,
+            )
             head += horizon
         return RunReport(
             "online",
@@ -496,9 +730,94 @@ class Session:
         )
         return RunReport("serving", self.spec, [stats], meta=summary)
 
+    # -- mode: a whole scenario grid in one call ---------------------------
+    BACKENDS = ("auto", "reference", "batched")
+
+    def run_sweep(self, grid: SweepGrid, *, backend: str = "auto") -> SweepReport:
+        """Run the base scenario across every point of ``grid``.
+
+        Backend routing: policies registered ``batched=True`` execute the
+        whole grid as one jit+vmap program (``core/sim_batch``), audited
+        bit-identically to the reference loop; anything else runs the
+        per-point reference engines (``run_sim``, or ``run_multi`` when the
+        point has a fleet).  Requesting ``backend="batched"`` for a
+        Python-only policy logs a warning and falls back to the reference
+        loop — never a silent wrong answer.
+        """
+        if backend not in self.BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; want one of {self.BACKENDS}")
+        entry = get_policy(self.spec.policy.name)
+        pts = grid.points()
+        specs = [_apply_point(self.spec, p) for p in pts]
+        meta: dict[str, Any] = {"requested_backend": backend, "grid_points": len(pts)}
+        use_batched = entry.batched if backend == "auto" else backend == "batched"
+        if use_batched and not entry.batched:
+            _LOG.warning(
+                "policy %r has no batched backend; run_sweep falling back to "
+                "the reference loop (registered batched policies: %s)",
+                entry.name,
+                sim_batch.batched_policies(),
+            )
+            meta["fallback"] = f"policy {entry.name!r} is not batched"
+            use_batched = False
+        t0 = time.perf_counter()
+        if use_batched:
+            points = self._sweep_batched(specs, pts)
+        else:
+            points = [self._sweep_reference(s, p) for s, p in zip(specs, pts)]
+        meta["wall_s"] = time.perf_counter() - t0
+        return SweepReport(
+            base=self.spec,
+            grid=grid,
+            backend="batched" if use_batched else "reference",
+            points=points,
+            meta=meta,
+        )
+
+    def _sweep_reference(self, spec: ScenarioSpec, pt: Mapping[str, Any]) -> SweepPoint:
+        rep = Session(spec).run("multi" if spec.fleet is not None else "sim")
+        return SweepPoint(overrides=dict(pt), streams=rep.streams, meta=dict(rep.meta))
+
+    def _sweep_batched(
+        self, specs: list[ScenarioSpec], pts: list[dict[str, Any]]
+    ) -> list[SweepPoint]:
+        base = self.spec
+        scens = [
+            sim_batch.BatchScenario(
+                stream=s.stream, n_frames=s.n_frames, params=s.policy.resolved
+            )
+            for s in specs
+        ]
+        stats = sim_batch.simulate_batch(
+            base.policy.name, list(base.models), scens, strict=base.strict
+        )
+        points = []
+        for spec, pt, st in zip(specs, pts, stats):
+            # Batched policies plan locally and never contend for the link or
+            # server, so a fleet of identical clients is N independent copies
+            # of the single-stream result (golden-tested vs run_multi).
+            n = spec.fleet.n_clients if spec.fleet is not None else 1
+            meta = {"policy": spec.policy.name}
+            if n > 1:
+                meta["replicated_clients"] = n
+            points.append(
+                SweepPoint(
+                    overrides=dict(pt),
+                    streams=[dataclasses.replace(st) for _ in range(n)],
+                    meta=meta,
+                )
+            )
+        return points
+
 
 # ---------------------------------------------------------------------------
-# CLI: one ScenarioSpec JSON in, one RunReport JSON out.
+# CLI: one ScenarioSpec JSON in, one RunReport/SweepReport JSON out.
+#
+#   python -m repro.session scenario.json --mode sim
+#   python -m repro.session sweep scenario.json --grid grid.json --backend auto
+#
+# Malformed specs/grids (bad JSON, unknown policy, invalid parameters) exit
+# nonzero with a one-line ``error: ...`` on stderr — never a traceback.
 # ---------------------------------------------------------------------------
 
 _EXAMPLE = ScenarioSpec(
@@ -508,11 +827,66 @@ _EXAMPLE = ScenarioSpec(
     label="example",
 )
 
+_EXAMPLE_GRID = SweepGrid(
+    bandwidth_mbps=(1.0, 2.5), deadline_ms=(150.0, 200.0, 250.0)
+)
+
+
+def _read(path: str) -> str:
+    return sys.stdin.read() if path == "-" else open(path).read()
+
+
+def _fail(exc: Exception) -> int:
+    print(f"error: {exc}", file=sys.stderr)
+    return 2
+
+
+def _sweep_main(argv: Sequence[str]) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.session sweep",
+        description="Run one ScenarioSpec across a SweepGrid; print a SweepReport JSON.",
+    )
+    ap.add_argument("spec", nargs="?", help="path to ScenarioSpec JSON, or '-' for stdin")
+    ap.add_argument("--grid", help="path to SweepGrid JSON (see --example-grid)")
+    ap.add_argument("--backend", default="auto", choices=Session.BACKENDS)
+    ap.add_argument("--out", help="write the SweepReport JSON here; print a summary instead")
+    ap.add_argument("--example-grid", action="store_true",
+                    help="print an example grid JSON and exit")
+    args = ap.parse_args(argv)
+
+    if args.example_grid:
+        print(json.dumps(_EXAMPLE_GRID.to_json(), indent=2))
+        return 0
+    if not args.spec or not args.grid:
+        ap.error("need a spec path and --grid (or --example-grid)")
+    try:
+        spec = ScenarioSpec.from_json(_read(args.spec))
+        grid = SweepGrid.from_json(_read(args.grid))
+        report = Session(spec).run_sweep(grid, backend=args.backend)
+        payload = json.dumps(report.to_json(), indent=2)
+        if args.out:
+            with open(args.out, "w") as fh:
+                fh.write(payload + "\n")
+    except (OSError, TypeError, ValueError) as exc:
+        return _fail(exc)
+    if args.out:
+        print(
+            f"{len(report)} points via {report.backend} backend in "
+            f"{report.meta.get('wall_s', 0.0):.2f}s -> {args.out}"
+        )
+    else:
+        print(payload)
+    return 0
+
 
 def main(argv: Sequence[str] | None = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv[:1] == ["sweep"]:
+        return _sweep_main(argv[1:])
     ap = argparse.ArgumentParser(
         prog="python -m repro.session",
-        description="Run a declarative FastVA scenario (ScenarioSpec JSON).",
+        description="Run a declarative FastVA scenario (ScenarioSpec JSON). "
+        "Use the 'sweep' subcommand to run a whole scenario grid.",
     )
     ap.add_argument("spec", nargs="?", help="path to ScenarioSpec JSON, or '-' for stdin")
     ap.add_argument("--mode", default="sim", choices=Session.MODES)
@@ -529,9 +903,11 @@ def main(argv: Sequence[str] | None = None) -> int:
         return 0
     if not args.spec:
         ap.error("need a spec path (or --list-policies / --example)")
-    payload = sys.stdin.read() if args.spec == "-" else open(args.spec).read()
-    spec = ScenarioSpec.from_json(payload)
-    report = Session(spec).run(args.mode)
+    try:
+        spec = ScenarioSpec.from_json(_read(args.spec))
+        report = Session(spec).run(args.mode)
+    except (OSError, TypeError, ValueError) as exc:
+        return _fail(exc)
     print(json.dumps(report.to_json(), indent=2))
     return 0
 

@@ -270,6 +270,37 @@ def test_session_cli_smoke(tmp_path, capsys):
     assert set(capsys.readouterr().out.split()) == set(available_policies())
 
 
+def test_session_cli_invalid_spec_is_one_line_error(tmp_path, capsys):
+    """A malformed / unknown-policy spec exits 2 with ``error: ...`` on
+    stderr — never a traceback (the CLI is a CI smoke surface)."""
+    from repro.session import main
+
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"policy": {"name": "definitely_not_a_policy"}}))
+    assert main([str(bad)]) == 2
+    err = capsys.readouterr().err
+    assert err.startswith("error:") and "unknown policy" in err
+    assert "Traceback" not in err and err.strip().count("\n") == 0
+
+    bad.write_text("{not json")
+    assert main([str(bad)]) == 2
+    err = capsys.readouterr().err
+    assert err.startswith("error:") and "Traceback" not in err
+
+    assert main([str(tmp_path / "missing.json")]) == 2
+    err = capsys.readouterr().err
+    assert err.startswith("error:") and "Traceback" not in err
+
+
+def test_make_policy_emits_deprecation_warning():
+    with pytest.warns(DeprecationWarning, match="make_policy"):
+        make_policy("max_accuracy")
+    # ...but still validates eagerly through the registry.
+    with pytest.warns(DeprecationWarning, match="make_policy"):
+        with pytest.raises(ValueError, match="requires parameter 'alpha'"):
+            make_policy("max_utility")
+
+
 # ---------------------------------------------------------------------------
 # Retrofitted constructors
 # ---------------------------------------------------------------------------

@@ -1,0 +1,250 @@
+"""Golden equivalence for the vectorized sweep backend.
+
+The contract under test (docs/simulation.md): for every registered
+``batched=True`` policy, ``Session.run_sweep(grid, backend="batched")``
+reproduces the reference simulator's audited per-scenario stats **exactly**
+— bit-identical accuracy sums, not approx — across a >= 100-point grid that
+exercises window padding (mixed fps), bin padding (mixed deadlines/grids),
+the infeasible horizon-1 path (deadline below every NPU latency), and
+policy-param axes.  Plus: registry flag <-> planner table sync, fleet-axis
+replication vs the real ``run_multi``, fallback routing, and the sweep CLI.
+"""
+from __future__ import annotations
+
+import json
+import logging
+
+import pytest
+
+from repro.core import PolicySpec
+from repro.core.registry import available_policies, get_policy
+from repro.core.sim_batch import batched_policies, simulate_batch
+from repro.session import (
+    FleetSpec,
+    ScenarioSpec,
+    Session,
+    SweepGrid,
+    SweepReport,
+)
+
+# Every batched policy with (base params, the param axis swept in the golden
+# grid).  test_registry_flag below fails if a policy registers batched=True
+# without joining this table — new backends must enter the golden sweep.
+BATCHED_PARAMS: dict[str, tuple[dict, dict]] = {
+    "jax_accuracy": ({}, {"grid": (1e-3, 2e-3)}),
+    "jax_utility": ({"alpha": 200.0}, {"alpha": (50.0, 200.0)}),
+}
+
+STATS_FIELDS = (
+    "accuracy_sum",
+    "frames_processed",
+    "frames_missed_deadline",
+    "frames_offloaded",
+    "frames_total",
+    "schedule_calls",
+)
+
+GOLD_FRAMES = 24
+
+
+def _golden_grid(param_axis: dict) -> SweepGrid:
+    # 2 x 5 x 5 x 2 = 100 points; deadline 10 ms < min t_npu (17 ms) forces
+    # the infeasible skip-all rounds, mixed fps forces window padding.
+    return SweepGrid(
+        bandwidth_mbps=(1.0, 2.5),
+        deadline_ms=(10.0, 100.0, 150.0, 200.0, 350.0),
+        fps=(10.0, 24.0, 30.0, 50.0, 60.0),
+        params=param_axis,
+    )
+
+
+def _assert_points_equal(ref, bat):
+    assert len(ref.points) == len(bat.points)
+    for pr, pb in zip(ref.points, bat.points):
+        assert pr.overrides == pb.overrides
+        assert len(pr.streams) == len(pb.streams)
+        for sr, sb in zip(pr.streams, pb.streams):
+            for f in STATS_FIELDS:
+                assert getattr(sr, f) == getattr(sb, f), (pr.overrides, f)
+
+
+def test_registry_flag_matches_backend_table():
+    flagged = {n for n in available_policies() if get_policy(n).batched}
+    assert set(batched_policies()) == flagged
+    assert set(BATCHED_PARAMS) == flagged  # new batched policies join the sweep
+
+
+@pytest.mark.parametrize("name", sorted(BATCHED_PARAMS))
+def test_batched_backend_matches_reference_exactly(name):
+    base_params, axis = BATCHED_PARAMS[name]
+    grid = _golden_grid(axis)
+    assert len(grid) >= 100
+    spec = ScenarioSpec(policy=PolicySpec(name, base_params), n_frames=GOLD_FRAMES)
+    ref = Session(spec).run_sweep(grid, backend="reference")
+    bat = Session(spec).run_sweep(grid, backend="batched")
+    assert ref.backend == "reference" and bat.backend == "batched"
+    assert len(bat.points) == len(grid)
+    _assert_points_equal(ref, bat)
+
+
+def test_infeasible_deadline_is_skip_not_miss():
+    """Deadline below every NPU latency: the reference emits horizon-1 SKIP
+    rounds (no processing, no deadline misses, one schedule call per frame);
+    the batched backend must reproduce that path, not approximate it."""
+    spec = ScenarioSpec(policy=PolicySpec("jax_accuracy"), n_frames=12)
+    rep = Session(spec).run_sweep(SweepGrid(deadline_ms=(10.0,)), backend="batched")
+    st = rep.points[0].stats
+    assert st.frames_processed == 0
+    assert st.frames_missed_deadline == 0
+    assert st.schedule_calls == 12  # one skip round per frame
+
+
+def test_fleet_axis_replication_matches_run_multi():
+    grid = SweepGrid(n_clients=(1, 3))
+    spec = ScenarioSpec(
+        policy=PolicySpec("jax_utility", {"alpha": 200.0}),
+        n_frames=GOLD_FRAMES,
+        fleet=FleetSpec(capacity=2),
+    )
+    ref = Session(spec).run_sweep(grid, backend="reference")
+    bat = Session(spec).run_sweep(grid, backend="batched")
+    _assert_points_equal(ref, bat)
+    assert [len(p.streams) for p in bat.points] == [1, 3]
+    assert bat.points[1].meta["replicated_clients"] == 3
+
+
+def test_width_axis_partitions_exactly():
+    grid = SweepGrid(fps=(20.0, 50.0), params={"width": (16, 64)})
+    spec = ScenarioSpec(policy=PolicySpec("jax_utility", {"alpha": 120.0}), n_frames=18)
+    ref = Session(spec).run_sweep(grid, backend="reference")
+    bat = Session(spec).run_sweep(grid, backend="batched")
+    _assert_points_equal(ref, bat)
+
+
+def test_large_width_still_supported():
+    """The registry puts no upper bound on the Pareto-front width; the sort
+    rewrite must not impose one (regression: a packed-payload variant once
+    asserted on width > 1024)."""
+    spec = ScenarioSpec(
+        policy=PolicySpec("jax_utility", {"alpha": 200.0, "width": 2048}), n_frames=6
+    )
+    ref = Session(spec).run_sweep(SweepGrid(), backend="reference")
+    bat = Session(spec).run_sweep(SweepGrid(), backend="batched")
+    _assert_points_equal(ref, bat)
+    assert ref.points[0].stats.frames_processed > 0
+
+
+def test_python_policy_falls_back_with_warning(caplog):
+    spec = ScenarioSpec(policy=PolicySpec("max_accuracy"), n_frames=6)
+    with caplog.at_level(logging.WARNING, logger="repro.session"):
+        rep = Session(spec).run_sweep(SweepGrid(bandwidth_mbps=(2.5,)), backend="batched")
+    assert rep.backend == "reference"
+    assert "fallback" in rep.meta
+    assert any("no batched backend" in r.getMessage() for r in caplog.records)
+    # auto-routing picks reference silently for Python-only policies
+    caplog.clear()
+    with caplog.at_level(logging.WARNING, logger="repro.session"):
+        auto = Session(spec).run_sweep(SweepGrid(bandwidth_mbps=(2.5,)))
+    assert auto.backend == "reference" and not caplog.records
+
+
+def test_simulate_batch_rejects_unbatched_policy():
+    with pytest.raises(ValueError, match="no batched backend"):
+        simulate_batch("max_accuracy", [], [])
+
+
+def test_sweep_grid_validation_and_points():
+    grid = SweepGrid(bandwidth_mbps=(1.0, 2.0), params={"alpha": (50.0,)})
+    assert len(grid) == 2
+    assert grid.points()[0] == {"bandwidth_mbps": 1.0, "alpha": 50.0}
+    assert len(SweepGrid()) == 1 and SweepGrid().points() == [{}]
+    with pytest.raises(ValueError, match="shadows a scenario axis"):
+        SweepGrid(params={"fps": (30.0,)})
+    with pytest.raises(ValueError, match="is empty"):
+        SweepGrid(params={"alpha": ()})
+    with pytest.raises(ValueError, match="unknown SweepGrid axes"):
+        SweepGrid.from_json({"bandwidth": [1.0]})
+    # scalars and strings are rejected, not silently iterated ("fifo" must
+    # not become the 4-point axis ('f','i','f','o'))
+    with pytest.raises(ValueError, match="must be a list"):
+        SweepGrid.from_json({"bandwidth_mbps": 2.5})
+    with pytest.raises(ValueError, match="must be a list"):
+        SweepGrid(allocation="fifo")
+    with pytest.raises(ValueError, match="must be a list"):
+        SweepGrid(params={"alpha": "50"})
+    with pytest.raises(ValueError, match="params must be a mapping"):
+        SweepGrid.from_json({"params": [50.0]})
+    rt = SweepGrid.from_json(json.loads(json.dumps(grid.to_json())))
+    assert rt == grid
+
+
+def test_unknown_backend_rejected():
+    spec = ScenarioSpec(policy=PolicySpec("local"), n_frames=6)
+    with pytest.raises(ValueError, match="unknown backend"):
+        Session(spec).run_sweep(SweepGrid(), backend="warp")
+
+
+def test_n_clients_axis_rejects_per_client_vectors():
+    spec = ScenarioSpec(
+        policy=PolicySpec("local"),
+        n_frames=6,
+        fleet=FleetSpec(n_clients=2, weights=(1.0, 2.0)),
+    )
+    with pytest.raises(ValueError, match="cannot resize"):
+        Session(spec).run_sweep(SweepGrid(n_clients=(1, 2)))
+
+
+def test_sweep_report_json_round_trip_batched():
+    spec = ScenarioSpec(policy=PolicySpec("jax_accuracy"), n_frames=12, label="rt")
+    rep = Session(spec).run_sweep(SweepGrid(deadline_ms=(150.0, 200.0)))
+    rt = SweepReport.from_json(json.loads(json.dumps(rep.to_json())))
+    assert rt == rep
+
+
+def test_sweep_cli_smoke(tmp_path, capsys):
+    from repro.session import main
+
+    spec_file = tmp_path / "scenario.json"
+    grid_file = tmp_path / "grid.json"
+    spec = ScenarioSpec(policy=PolicySpec("local"), n_frames=6, label="cli-sweep")
+    spec_file.write_text(json.dumps(spec.to_json()))
+    grid_file.write_text(json.dumps(SweepGrid(bandwidth_mbps=(1.0, 2.5)).to_json()))
+    assert main(["sweep", str(spec_file), "--grid", str(grid_file)]) == 0
+    report = SweepReport.from_json(json.loads(capsys.readouterr().out))
+    assert len(report) == 2 and report.base.label == "cli-sweep"
+
+    out_file = tmp_path / "report.json"
+    assert main([
+        "sweep", str(spec_file), "--grid", str(grid_file), "--out", str(out_file),
+    ]) == 0
+    assert "2 points via reference backend" in capsys.readouterr().out
+    saved = SweepReport.from_json(out_file.read_text())
+    assert [p.overrides for p in saved] == [p.overrides for p in report]
+    assert [p.stats.accuracy_sum for p in saved] == [p.stats.accuracy_sum for p in report]
+
+    grid_file.write_text('{"bandwidth": [1.0]}')  # unknown axis
+    assert main(["sweep", str(spec_file), "--grid", str(grid_file)]) == 2
+    err = capsys.readouterr().err
+    assert err.startswith("error:") and "Traceback" not in err
+
+    grid_file.write_text('{"bandwidth_mbps": 2.5}')  # scalar axis
+    assert main(["sweep", str(spec_file), "--grid", str(grid_file)]) == 2
+    err = capsys.readouterr().err
+    assert "must be a list" in err and "Traceback" not in err
+
+    # malformed payload shapes that raise TypeError deep in from_json still
+    # honor the one-line contract
+    grid_file.write_text(json.dumps(SweepGrid(bandwidth_mbps=(1.0,)).to_json()))
+    spec_file.write_text('{"policy": {"name": "local"}, "models": 5}')
+    assert main(["sweep", str(spec_file), "--grid", str(grid_file)]) == 2
+    err = capsys.readouterr().err
+    assert err.startswith("error:") and "Traceback" not in err
+
+    # unwritable --out is the same one-line error contract, not a traceback
+    grid_file.write_text(json.dumps(SweepGrid(bandwidth_mbps=(1.0,)).to_json()))
+    assert main([
+        "sweep", str(spec_file), "--grid", str(grid_file),
+        "--out", str(tmp_path / "no" / "such" / "dir" / "r.json"),
+    ]) == 2
+    err = capsys.readouterr().err
+    assert err.startswith("error:") and "Traceback" not in err

@@ -1,0 +1,122 @@
+"""Property tests for the vectorized sweep backend.
+
+Two invariants, on *random* inputs rather than the curated golden grid:
+
+  * for arbitrary model profiles (including server-only models and models
+    with empty NPU accuracy tables), stream shapes, frame budgets, and
+    policy params, every scenario of a mixed batch through
+    ``sim_batch.simulate_batch`` returns stats identical to the reference
+    ``simulate`` loop — the padding/grouping machinery must be invisible;
+  * ``SweepReport`` JSON round-trips losslessly through ``to_json`` /
+    ``from_json`` for random grids on both backends.
+
+Stream shapes are drawn from small value sets (not continuous floats) so the
+jit cache is shared across examples; model latencies and policy params stay
+continuous — they are traced, not compiled.
+"""
+from __future__ import annotations
+
+import json
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+
+from repro.core import PolicySpec, StreamSpec, Trace, profile_ms, simulate  # noqa: E402
+from repro.core.sim_batch import BatchScenario, simulate_batch  # noqa: E402
+from repro.session import ScenarioSpec, Session, SweepGrid, SweepReport  # noqa: E402
+
+SETTINGS = settings(
+    max_examples=10, deadline=None, suppress_health_check=[HealthCheck.too_slow]
+)
+
+STATS_FIELDS = (
+    "accuracy_sum",
+    "frames_processed",
+    "frames_missed_deadline",
+    "frames_offloaded",
+    "frames_total",
+    "schedule_calls",
+)
+
+
+@st.composite
+def model_sets(draw):
+    n = draw(st.integers(1, 3))
+    models = []
+    for i in range(n):
+        runs_local = draw(st.booleans()) if n > 1 else True
+        has_acc = draw(st.booleans())
+        models.append(
+            profile_ms(
+                f"m{i}",
+                t_npu_ms=draw(st.floats(5, 250)) if runs_local else float("inf"),
+                t_server_ms=draw(st.floats(5, 120)),
+                acc_server={45: 0.2, 224: draw(st.floats(0.3, 0.95))},
+                acc_npu={224: draw(st.floats(0.1, 0.9))} if has_acc else {},
+            )
+        )
+    return models
+
+
+@st.composite
+def batch_cases(draw):
+    models = draw(model_sets())
+    policy = draw(st.sampled_from(("jax_accuracy", "jax_utility")))
+    scens = []
+    for _ in range(draw(st.integers(1, 3))):
+        stream = StreamSpec(
+            fps=draw(st.sampled_from((10.0, 30.0, 50.0))),
+            deadline=draw(st.sampled_from((15.0, 50.0, 100.0, 200.0, 350.0))) / 1e3,
+        )
+        if policy == "jax_utility":
+            params = {
+                "alpha": draw(st.floats(1.0, 400.0)),
+                "width": draw(st.sampled_from((16, 64))),
+            }
+        else:
+            params = {"grid": draw(st.sampled_from((1e-3, 2e-3)))}
+        scens.append(
+            (stream, draw(st.integers(1, 30)), PolicySpec(policy, params))
+        )
+    return models, policy, scens
+
+
+@SETTINGS
+@given(batch_cases())
+def test_batched_stats_equal_reference_simulate(case):
+    models, policy, scens = case
+    batch = [
+        BatchScenario(stream=stream, n_frames=n, params=spec.resolved)
+        for stream, n, spec in scens
+    ]
+    out = simulate_batch(policy, models, batch)
+    assert len(out) == len(scens)
+    for (stream, n, spec), got in zip(scens, out):
+        ref = simulate(spec.build(), models, stream, Trace.constant(2.5), n)
+        for f in STATS_FIELDS:
+            assert getattr(got, f) == getattr(ref, f), (spec, stream, n, f)
+
+
+@SETTINGS
+@given(
+    policy=st.sampled_from(("jax_accuracy", "local")),
+    bandwidths=st.lists(st.floats(0.5, 4.0), min_size=1, max_size=2, unique=True),
+    deadlines=st.lists(st.sampled_from((100.0, 150.0, 200.0, 250.0)), min_size=1,
+                       max_size=2, unique=True),
+    alpha_axis=st.booleans(),
+)
+def test_sweep_report_round_trips_losslessly(policy, bandwidths, deadlines, alpha_axis):
+    grid = SweepGrid(
+        bandwidth_mbps=tuple(bandwidths),
+        deadline_ms=tuple(deadlines),
+        params={"alpha": (50.0, 200.0)} if alpha_axis and policy == "local" else {},
+    )
+    spec = ScenarioSpec(policy=PolicySpec(policy), n_frames=6, label="prop-rt")
+    rep = Session(spec).run_sweep(grid)
+    assert rep.backend == ("batched" if policy == "jax_accuracy" else "reference")
+    rt = SweepReport.from_json(json.loads(json.dumps(rep.to_json())))
+    assert rt == rep
+    assert rt.grid.points() == grid.points()
