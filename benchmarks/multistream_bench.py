@@ -1,33 +1,41 @@
 """Multi-stream edge-server benchmark: N clients sharing one uplink + edge.
 
-Reports, per (bandwidth, policy, client-count) cell:
-  * fleet aggregate accuracy (mean over all frames of all clients, missed = 0);
-  * the worst per-client deadline-miss rate;
-  * total frames served on the edge and server utilization.
+Two halves:
 
-What the numbers show (acceptance criteria for the multi-tenant subsystem):
-  * coordinated policies (weighted_fair / priority) keep every client's
-    deadline-miss rate bounded (~0) as the client count grows — saturated
-    clients degrade to their local NPU plan instead of missing deadlines;
-  * naive FIFO offloading (every client assumes it owns the link) collapses
-    under contention, so the edge-server policy beats it on aggregate
-    accuracy for every N >= 2.
+1. **Backend ladder** (the default; emits ``BENCH_multistream.json``):
+   the same (bandwidth x deadline x n_clients x allocation) fleet grid of
+   interacting ``offload`` clients runs through both ``Session.run_sweep``
+   backends — the reference ``simulate_multi`` event loop and the
+   vectorized ``core/sim_multi_batch`` engine — at grid sizes
+   {10, 100, 1000}.  Every cell asserts equivalence (integer stats exact,
+   float stats within ``sim_multi_batch.MULTI_TOL``; bit-equality is
+   recorded as ``exact_match``).  Acceptance criterion tracked here: at
+   the 1000-point grid the batched engine is >= 10x faster than the
+   reference loop warm (``batched_cold_s`` includes jit compilation).
 
-The whole (bandwidth x allocation x client-count) lattice is ONE declarative
-``SweepGrid`` run through ``Session.run_sweep`` (each point executes the
-audited ``run_multi`` engine); only the priority demo is a hand-built
-single ``ScenarioSpec``.  Run directly for a human-readable table:
+2. **Fleet behaviour tables** (``--tables``): per (bandwidth, policy,
+   client-count) cell, fleet aggregate accuracy, worst per-client
+   deadline-miss rate, edge frames, and server utilization — the
+   multi-tenant subsystem's original acceptance numbers (coordinated
+   policies stay bounded while naive FIFO collapses under contention).
 
-    PYTHONPATH=src python benchmarks/multistream_bench.py
+    PYTHONPATH=src python benchmarks/multistream_bench.py           # full ladder
+    PYTHONPATH=src python benchmarks/multistream_bench.py --smoke   # 10+100 (CI)
+    PYTHONPATH=src python benchmarks/multistream_bench.py --tables  # + tables
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
+import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.core import PolicySpec  # noqa: E402
+from repro.core import sim_multi_batch  # noqa: E402
+from repro.core.sim_multi_batch import EQUIV_INT_FIELDS, MULTI_TOL  # noqa: E402
 from repro.session import FleetSpec, ScenarioSpec, Session, SweepGrid, TraceSpec  # noqa: E402
 
 N_FRAMES = 60
@@ -35,6 +43,11 @@ CLIENT_COUNTS = (1, 2, 4, 8)
 POLICIES = ("weighted_fair", "fifo")
 BANDWIDTHS_MBPS = (6.0, 12.0)
 CAPACITY = 4
+
+# Backend-ladder knobs (half 1).
+LADDER_FRAMES = 30
+SIZES = (10, 100, 1000)
+DEFAULT_OUT = "BENCH_multistream.json"
 
 
 def _run(mbps: float, allocation: str, n: int, *, capacity: int = CAPACITY,
@@ -111,10 +124,116 @@ def multistream_priority():
     return rows
 
 
-ALL = [multistream_scaling, multistream_priority]
+# ---------------------------------------------------------------------------
+# Half 1: reference vs batched fleet engine (BENCH_multistream.json)
+# ---------------------------------------------------------------------------
+
+def make_fleet_grid(size: int) -> SweepGrid:
+    """A (bandwidth x deadline x n_clients x allocation) fleet grid with
+    exactly ``size`` points — every point an *interacting* fleet."""
+    if size == 10:
+        return SweepGrid(
+            bandwidth_mbps=(2.0, 4.0, 6.0, 9.0, 12.0),
+            n_clients=(4,),
+            allocation=("weighted_fair", "fifo"),
+        )
+    if size == 100:
+        return SweepGrid(
+            bandwidth_mbps=(1.0, 2.5, 6.0, 9.0, 12.0),
+            deadline_ms=(150.0, 175.0, 200.0, 250.0, 350.0),
+            n_clients=(4, 8),
+            allocation=("weighted_fair", "fifo"),
+        )
+    if size == 1000:
+        return SweepGrid(
+            bandwidth_mbps=tuple(1.0 + 0.5 * i for i in range(25)),
+            deadline_ms=tuple(120.0 + 25.0 * i for i in range(10)),
+            n_clients=(4, 8),
+            allocation=("weighted_fair", "fifo"),
+        )
+    raise ValueError(f"no predefined fleet grid of size {size}")
 
 
-def main() -> int:
+def _compare_points(ref, bat) -> tuple[bool, bool, float]:
+    """(equivalent within MULTI_TOL, bit-exact floats, max abs float diff)."""
+    ints_ok, exact = True, True
+    max_diff = 0.0
+    for pr, pb in zip(ref.points, bat.points):
+        for sr, sb in zip(pr.streams, pb.streams):
+            ints_ok &= all(getattr(sr, f) == getattr(sb, f) for f in EQUIV_INT_FIELDS)
+            d = abs(sr.accuracy_sum - sb.accuracy_sum)
+            max_diff = max(max_diff, d)
+            exact &= sr.accuracy_sum == sb.accuracy_sum
+        for key in ("server_jobs", "grants", "denials"):
+            ints_ok &= pr.meta.get(key) == pb.meta.get(key)
+    return ints_ok and max_diff <= MULTI_TOL, exact and ints_ok, max_diff
+
+
+def bench_cell(size: int) -> dict:
+    grid = make_fleet_grid(size)
+    session = Session(
+        ScenarioSpec(
+            policy=PolicySpec("offload"),
+            n_frames=LADDER_FRAMES,
+            trace=TraceSpec(mbps=6.0),
+            fleet=FleetSpec(capacity=CAPACITY),
+            label=f"multistream_bench/offload/{size}",
+        )
+    )
+    t0 = time.perf_counter()
+    ref = session.run_sweep(grid, backend="reference")
+    reference_s = time.perf_counter() - t0
+    # Drop compiled programs carried over from smaller ladder cells so
+    # batched_cold_s honestly includes this cell's jit compilation.
+    sim_multi_batch._fleet_program.cache_clear()
+    t0 = time.perf_counter()
+    session.run_sweep(grid, backend="batched")
+    batched_cold_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    bat = session.run_sweep(grid, backend="batched")
+    batched_warm_s = time.perf_counter() - t0
+    assert bat.meta.get("engine") == "sim_multi_batch", bat.meta
+    equivalent, exact, max_diff = _compare_points(ref, bat)
+    return {
+        "policy": "offload",
+        "grid_points": len(grid),
+        "n_frames": LADDER_FRAMES,
+        "reference_s": reference_s,
+        "batched_cold_s": batched_cold_s,
+        "batched_warm_s": batched_warm_s,
+        "speedup_cold": reference_s / batched_cold_s if batched_cold_s > 0 else 0.0,
+        "speedup_warm": reference_s / batched_warm_s if batched_warm_s > 0 else 0.0,
+        "equivalent": equivalent,
+        "exact_match": exact,
+        "max_abs_diff": max_diff,
+    }
+
+
+def run_ladder(sizes=SIZES) -> dict:
+    return {
+        "bench": "multistream",
+        "policy": "offload",
+        "n_frames": LADDER_FRAMES,
+        "tolerance": MULTI_TOL,
+        "cells": [bench_cell(size) for size in sizes],
+    }
+
+
+# run.py auto-discovery: smoke-sized rows only (the 1000-point ladder is a
+# manual / CI-artifact run — see main()).
+def multistream_backend_smoke():
+    rows = []
+    for cell in run_ladder(sizes=(10,))["cells"]:
+        name = f"multistream/{cell['policy']}/n{cell['grid_points']}"
+        rows.append((f"{name}/speedup_warm", cell["batched_warm_s"] * 1e6, cell["speedup_warm"]))
+        rows.append((f"{name}/equivalent", cell["reference_s"] * 1e6, float(cell["equivalent"])))
+    return rows
+
+
+ALL = [multistream_backend_smoke, multistream_scaling, multistream_priority]
+
+
+def _tables() -> int:
     print(f"{N_FRAMES} frames/client, capacity={CAPACITY} server slots\n")
     print(f"{'B (Mbps)':>8} {'policy':>14} {'N':>3} {'agg acc':>8} {'max miss':>9} "
           f"{'edge frames':>12} {'srv util':>9}")
@@ -139,6 +258,39 @@ def main() -> int:
     print(f"\ncoordinated miss rate bounded (<=0.10 at every N): {ok_bounded}")
     print(f"weighted_fair >= fifo aggregate accuracy for N>=2:  {ok_beats_fifo}")
     return 0 if (ok_bounded and ok_beats_fifo) else 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="10+100-point grids only (CI smoke; still emits the JSON artifact)")
+    ap.add_argument("--out", default=DEFAULT_OUT, help=f"output path (default {DEFAULT_OUT})")
+    ap.add_argument("--tables", action="store_true",
+                    help="also print the fleet behaviour tables (max_accuracy lattice)")
+    args = ap.parse_args(argv)
+
+    result = run_ladder(sizes=(10, 100) if args.smoke else SIZES)
+    with open(args.out, "w") as fh:
+        json.dump(result, fh, indent=2)
+        fh.write("\n")
+
+    print(f"{'points':>7} {'ref (s)':>9} {'cold (s)':>9} {'warm (s)':>9} "
+          f"{'speedup':>8} {'equiv':>6} {'exact':>6}")
+    ok = True
+    for c in result["cells"]:
+        print(f"{c['grid_points']:>7} {c['reference_s']:>9.2f} "
+              f"{c['batched_cold_s']:>9.2f} {c['batched_warm_s']:>9.2f} "
+              f"{c['speedup_warm']:>7.1f}x {str(c['equivalent']):>6} "
+              f"{str(c['exact_match']):>6}")
+        ok &= c["equivalent"]
+        if c["grid_points"] >= 1000:
+            ok &= c["speedup_warm"] >= 10.0
+    print(f"\nwrote {args.out}")
+
+    if args.tables:
+        print()
+        ok &= _tables() == 0
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":

@@ -13,6 +13,8 @@ Public surface:
   simulator.simulate          — audited stream replay (reference loop)
   simulator.simulate_multi    — N streams, shared fluid uplink + server queue
   sim_batch.simulate_batch    — vectorized jit+vmap sweep backend
+  sim_multi_batch.simulate_multi_batch — vectorized *fleet* backend
+                                (interacting clients on device)
   edge_server                 — multi-tenant admission/bandwidth scheduler
   jax_sched                   — jitted lax implementations of both DPs
   controller.OnlineController — streaming controller w/ bandwidth estimation
@@ -33,9 +35,11 @@ from . import (  # noqa: F401
     registry,
     schedule,
     sim_batch,
+    sim_multi_batch,
     simulator,
 )
 from .sim_batch import BatchScenario, simulate_batch  # noqa: F401
+from .sim_multi_batch import FleetScenario, simulate_multi_batch  # noqa: F401
 from .controller import BandwidthEstimator, OnlineController  # noqa: F401
 from .registry import (  # noqa: F401
     Param,

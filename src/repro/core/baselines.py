@@ -24,6 +24,12 @@ _ALPHA = Param.number("alpha", None, nullable=True, doc="None = accuracy mode; f
     "offload",
     params=(_ALPHA,),
     doc="§VI.C Offload baseline: always ship to the edge, resize to keep up.",
+    # The round plan below is closed-form in the granted bandwidth, so
+    # sim_multi_batch ships a vectorized *fleet* implementation of it:
+    # whole (bandwidth x deadline x n_clients x allocation) grids of
+    # interacting clients — shared fluid uplink, EdgeServerScheduler
+    # admission, server worker queue — run as one jit+vmap program.
+    batched_multi=True,
 )
 def offload_plan_round(
     models: Sequence[ModelProfile],

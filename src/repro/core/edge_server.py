@@ -41,6 +41,65 @@ from .registry import PolicySpec
 
 ALLOCATION_POLICIES = ("weighted_fair", "priority", "fifo")
 
+_EPS = 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Pure allocation arithmetic.  These are the scheduler's numeric semantics
+# stripped of all lease bookkeeping, shared verbatim by the stateful
+# EdgeServerScheduler below, the fluid-link reference loop
+# (simulator.simulate_multi), and — expression by expression — the
+# vectorized fleet backend (core/sim_multi_batch), which re-renders them as
+# f64 tensor programs.  Keep them dependency-free and side-effect-free.
+# ---------------------------------------------------------------------------
+
+
+def effective_weight(policy: str, weight: float, priority: int) -> float:
+    """Allocation weight of one client: raw weight, or priority-boosted
+    ``w * 2**p`` under the ``priority`` policy."""
+    if policy == "priority":
+        return weight * (2.0 ** priority)
+    return weight
+
+
+def fair_share(bandwidth_bps: float, w_eff: float, total_w_eff: float) -> float:
+    """The static weighted-fair bandwidth share ``B * w_i / sum_j w_j``."""
+    return bandwidth_bps * w_eff / total_w_eff
+
+
+def fluid_rates(
+    bandwidth_bps: float,
+    weights: Sequence[float],
+    caps: Sequence[float],
+    *,
+    eps: float = _EPS,
+) -> list[float]:
+    """Weighted max-min (water-filling) split of one link across transfers.
+
+    Each transfer asks for its weight-proportional share but never exceeds
+    its ``cap``; capped transfers return their leftover to the pool.  When
+    the caps are scheduler grants summing to <= B this degenerates to
+    "everyone transmits at the granted rate"; with infinite caps (fifo) it
+    is plain weighted processor sharing.  This is the reference fluid model
+    of ``simulator.simulate_multi`` (tested in tests/test_edge_server.py).
+    """
+    rates = [0.0] * len(weights)
+    active = list(range(len(weights)))
+    remaining = max(bandwidth_bps, 0.0)
+    while active and remaining > eps:
+        total_w = sum(weights[i] for i in active) or 1.0
+        capped = [i for i in active if caps[i] <= remaining * weights[i] / total_w + eps]
+        if not capped:
+            for i in active:
+                rates[i] = remaining * weights[i] / total_w
+            return rates
+        for i in capped:
+            rates[i] = caps[i]
+            remaining -= caps[i]
+        remaining = max(remaining, 0.0)
+        active = [i for i in active if i not in capped]
+    return rates
+
 
 @dataclass
 class EdgeClient:
@@ -146,9 +205,7 @@ class EdgeServerScheduler:
 
     # -- weights -----------------------------------------------------------
     def _effective_weight(self, c: EdgeClient) -> float:
-        if self.policy == "priority":
-            return c.weight * (2.0 ** c.priority)
-        return c.weight
+        return effective_weight(self.policy, c.weight, c.priority)
 
     def _total_weight(self) -> float:
         return sum(self._effective_weight(c) for c in self.clients.values()) or 1.0
@@ -179,7 +236,7 @@ class EdgeServerScheduler:
 
         used = self._link_reserved(exclude=client_id)
         available = max(net.bandwidth_bps - used, 0.0)
-        share = net.bandwidth_bps * self._effective_weight(c) / self._total_weight()
+        share = fair_share(net.bandwidth_bps, self._effective_weight(c), self._total_weight())
         grant = min(share, available)
         if grant <= 0.0:
             self.audit.denials += 1

@@ -348,6 +348,7 @@ def local_utility_dp_jax(
     ),
     doc="Jitted Max-Accuracy local DP (every window frame on the NPU).",
     batched=True,
+    batched_multi=True,  # local-only plans: a fleet is N independent copies
 )
 def plan_round_accuracy(
     models: Sequence[ModelProfile],
@@ -391,6 +392,7 @@ def plan_round_accuracy(
     ),
     doc="Jitted Max-Utility local DP (dominance-pruned front, skips allowed).",
     batched=True,
+    batched_multi=True,  # local-only plans: a fleet is N independent copies
 )
 def plan_round_utility(
     models: Sequence[ModelProfile],

@@ -92,7 +92,14 @@ class PolicyEntry:
     ``batched=True`` declares that :mod:`repro.core.sim_batch` ships a
     vectorized (jit+vmap) implementation of this policy's round semantics,
     so ``Session.run_sweep`` may execute whole scenario grids on device.
-    Policies without the flag always run through the reference Python loop.
+    ``batched_multi=True`` declares the *multi-stream* capability: the
+    policy's rounds can be executed for whole fleets of interacting clients
+    (shared fluid uplink + edge-server queue) by
+    :mod:`repro.core.sim_multi_batch` — either through a dedicated fleet
+    planner there (``offload``) or, for ``batched`` local-only policies,
+    by per-client replication of the single-stream program (clients that
+    never touch the shared link are independent).  Policies without either
+    flag always run through the reference Python loops.
     """
 
     name: str
@@ -100,6 +107,7 @@ class PolicyEntry:
     params: tuple[Param, ...] = ()
     doc: str = ""
     batched: bool = False
+    batched_multi: bool = False
 
     def param(self, name: str) -> Param | None:
         for p in self.params:
@@ -134,14 +142,21 @@ _BUILTINS_LOADED = False
 
 
 def register_policy(
-    name: str, *, params: Sequence[Param] = (), doc: str = "", batched: bool = False
+    name: str,
+    *,
+    params: Sequence[Param] = (),
+    doc: str = "",
+    batched: bool = False,
+    batched_multi: bool = False,
 ) -> Callable:
     """Decorator: register ``fn`` as policy ``name`` with a parameter schema.
 
     ``fn`` must follow the plan-round contract:
     ``fn(models, stream, net, *, npu_free, **params) -> RoundPlan``.
     ``batched=True`` additionally promises a matching vectorized backend in
-    :mod:`repro.core.sim_batch` (golden-tested against this ``fn``).
+    :mod:`repro.core.sim_batch`; ``batched_multi=True`` promises a fleet
+    backend in :mod:`repro.core.sim_multi_batch` (both golden-tested
+    against this ``fn`` through the reference simulators).
     """
 
     def deco(fn: Callable) -> Callable:
@@ -153,6 +168,7 @@ def register_policy(
             params=tuple(params),
             doc=doc or (fn.__doc__ or "").strip(),
             batched=batched,
+            batched_multi=batched_multi,
         )
         return fn
 

@@ -6,7 +6,8 @@ The simulator is the ground truth for every figure benchmark: policies only
 ``validate_plan`` rejects any deadline/overlap violation (a violating frame
 counts as missed, accuracy 0 — defence against buggy policies).
 
-Two entry points:
+Two entry points (both have vectorized grid counterparts: ``sim_batch``
+for single streams, ``sim_multi_batch`` for interacting fleets):
   simulate        one stream, the paper's setting (§VI figures);
   simulate_multi  N streams contending for one shared uplink + edge server,
                   driven by ``edge_server.EdgeServerScheduler`` (see
@@ -24,6 +25,7 @@ from dataclasses import dataclass
 from typing import Callable, Protocol, Sequence
 
 from .audit import apply_round, audit_round
+from .edge_server import fluid_rates
 from .profiles import ModelProfile, NetworkState, StreamSpec
 from .schedule import RoundPlan, StreamStats
 
@@ -201,28 +203,16 @@ class MultiStreamStats:
 def _fluid_rates(bandwidth_bps: float, uploads: Sequence[_Upload]) -> list[float]:
     """Weighted max-min (water-filling) split of the link across uploads.
 
-    Each upload asks for its weight-proportional share but never exceeds its
-    ``rate_cap``; capped uploads return their leftover to the pool.  When the
-    caps are scheduler grants summing to <= B this degenerates to "everyone
-    transmits at the granted rate"; with infinite caps (fifo) it is plain
-    weighted processor sharing.
+    Pure arithmetic lives in :func:`repro.core.edge_server.fluid_rates`
+    (shared with the vectorized fleet backend); this wrapper just unpacks
+    the in-flight ``_Upload`` records.
     """
-    rates = [0.0] * len(uploads)
-    active = list(range(len(uploads)))
-    remaining = max(bandwidth_bps, 0.0)
-    while active and remaining > _EPS:
-        total_w = sum(uploads[i].weight for i in active) or 1.0
-        capped = [i for i in active if uploads[i].rate_cap <= remaining * uploads[i].weight / total_w + _EPS]
-        if not capped:
-            for i in active:
-                rates[i] = remaining * uploads[i].weight / total_w
-            return rates
-        for i in capped:
-            rates[i] = uploads[i].rate_cap
-            remaining -= uploads[i].rate_cap
-        remaining = max(remaining, 0.0)
-        active = [i for i in active if i not in capped]
-    return rates
+    return fluid_rates(
+        bandwidth_bps,
+        [u.weight for u in uploads],
+        [u.rate_cap for u in uploads],
+        eps=_EPS,
+    )
 
 
 def simulate_multi(

@@ -43,7 +43,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Iterator, Mapping, Sequence
 
-from .core import sim_batch
+from .core import sim_batch, sim_multi_batch
 from .core.audit import AUDIT_TOL, apply_round, audit_round
 from .core.controller import BandwidthEstimator, OnlineController
 from .core.edge_server import ALLOCATION_POLICIES, EdgeServerScheduler, make_fleet
@@ -738,11 +738,16 @@ class Session:
 
         Backend routing: policies registered ``batched=True`` execute the
         whole grid as one jit+vmap program (``core/sim_batch``), audited
-        bit-identically to the reference loop; anything else runs the
-        per-point reference engines (``run_sim``, or ``run_multi`` when the
-        point has a fleet).  Requesting ``backend="batched"`` for a
-        Python-only policy logs a warning and falls back to the reference
-        loop — never a silent wrong answer.
+        bit-identically to the reference loop; fleet grids of
+        ``batched_multi=True`` policies execute through the vectorized
+        multi-stream engine (``core/sim_multi_batch`` — shared fluid
+        uplink, scheduler admission, server queue on device, equivalence
+        certified to ``sim_multi_batch.MULTI_TOL``).  Anything else runs
+        the per-point reference engines (``run_sim``, or ``run_multi``
+        when the point has a fleet).  Requesting ``backend="batched"`` for
+        a policy/grid combination without a vectorized engine logs a
+        warning and falls back to the reference loop — never a silent
+        wrong answer.
         """
         if backend not in self.BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; want one of {self.BACKENDS}")
@@ -750,19 +755,26 @@ class Session:
         pts = grid.points()
         specs = [_apply_point(self.spec, p) for p in pts]
         meta: dict[str, Any] = {"requested_backend": backend, "grid_points": len(pts)}
-        use_batched = entry.batched if backend == "auto" else backend == "batched"
-        if use_batched and not entry.batched:
+        capable, why = self._batched_capability(entry, specs)
+        use_batched = capable if backend == "auto" else backend == "batched"
+        if use_batched and not capable:
             _LOG.warning(
-                "policy %r has no batched backend; run_sweep falling back to "
-                "the reference loop (registered batched policies: %s)",
-                entry.name,
+                "%s; run_sweep falling back to the reference loop "
+                "(batched policies: %s; batched fleet policies: %s)",
+                why,
                 sim_batch.batched_policies(),
+                sim_multi_batch.multi_batched_policies(),
             )
-            meta["fallback"] = f"policy {entry.name!r} is not batched"
+            meta["fallback"] = why
             use_batched = False
         t0 = time.perf_counter()
         if use_batched:
-            points = self._sweep_batched(specs, pts)
+            if entry.batched:
+                meta["engine"] = "sim_batch"
+                points = self._sweep_batched(specs, pts)
+            else:
+                meta["engine"] = "sim_multi_batch"
+                points = self._sweep_batched_multi(specs, pts)
         else:
             points = [self._sweep_reference(s, p) for s, p in zip(specs, pts)]
         meta["wall_s"] = time.perf_counter() - t0
@@ -773,6 +785,37 @@ class Session:
             points=points,
             meta=meta,
         )
+
+    def _batched_capability(self, entry, specs: Sequence[ScenarioSpec]) -> tuple[bool, str]:
+        """Can this (policy, grid) combination run on a vectorized engine?
+
+        Single-stream grids need ``batched=True`` (``sim_batch``).  Fleet
+        grids accept either ``batched=True`` (local-only plans: per-client
+        replication) or ``batched_multi=True`` with a dedicated fleet
+        planner (``sim_multi_batch``) — the latter additionally requires a
+        fleet and a constant trace at every point, because the tensor
+        program models one constant-bandwidth shared link.
+        """
+        fleet_pts = sum(1 for s in specs if s.fleet is not None)
+        if fleet_pts == 0:
+            if entry.batched:
+                return True, ""
+            return False, f"policy {entry.name!r} has no batched backend"
+        if entry.batched:  # local-only plans never contend: replication
+            return True, ""
+        if not entry.batched_multi:
+            return False, f"policy {entry.name!r} has no batched backend"
+        if fleet_pts < len(specs):
+            return False, (
+                f"fleet backend for {entry.name!r} needs a fleet at every "
+                "grid point (grid mixes fleet and single-stream points)"
+            )
+        if any(s.trace.kind != "constant" for s in specs):
+            return False, (
+                f"fleet backend for {entry.name!r} needs a constant trace "
+                "at every grid point"
+            )
+        return True, ""
 
     def _sweep_reference(self, spec: ScenarioSpec, pt: Mapping[str, Any]) -> SweepPoint:
         rep = Session(spec).run("multi" if spec.fleet is not None else "sim")
@@ -806,6 +849,46 @@ class Session:
                     streams=[dataclasses.replace(st) for _ in range(n)],
                     meta=meta,
                 )
+            )
+        return points
+
+    def _sweep_batched_multi(
+        self, specs: list[ScenarioSpec], pts: list[dict[str, Any]]
+    ) -> list[SweepPoint]:
+        """Fleet grid through the vectorized multi-stream engine: every
+        point's interacting fleet (shared uplink + server queue) runs on
+        device; per-point meta mirrors what ``run_multi`` reports."""
+        base = self.spec
+        scens = [
+            sim_multi_batch.FleetScenario(
+                stream=s.stream,
+                n_frames=s.n_frames,
+                bandwidth_bps=s.trace.mbps * 1e6,
+                rtt=s.trace.rtt_ms / 1e3,
+                n_clients=s.fleet.n_clients,
+                allocation=s.fleet.allocation,
+                capacity=s.fleet.capacity,
+                backlog_limit=s.fleet.backlog_limit,
+                weights=s.fleet.weights,
+                priorities=s.fleet.priorities,
+                params=s.policy.resolved,
+            )
+            for s in specs
+        ]
+        results = sim_multi_batch.simulate_multi_batch(
+            base.policy.name, list(base.models), scens, strict=base.strict
+        )
+        points = []
+        for spec, pt, (ms, sched_meta) in zip(specs, pts, results):
+            meta = {
+                "policy": spec.policy.name,
+                "allocation": spec.fleet.allocation,
+                "server_jobs": ms.server_jobs,
+                "server_utilization": ms.server_utilization,
+                **sched_meta,
+            }
+            points.append(
+                SweepPoint(overrides=dict(pt), streams=ms.per_client, meta=meta)
             )
         return points
 

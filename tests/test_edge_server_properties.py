@@ -1,0 +1,201 @@
+"""Hypothesis property tests for the EdgeServerScheduler contract.
+
+The scheduler is mechanism only — it grants (bandwidth, slot) leases — so
+its invariants are statable without any simulation:
+
+  * the sum of link-active lease bandwidth never exceeds the link, no
+    matter what op sequence drove the scheduler there (weighted_fair and
+    priority; fifo deliberately oversubscribes);
+  * with a clean scheduler, weighted_fair grants are weight-proportional
+    within float rounding;
+  * priority never hands a slot-consuming grant to a lower class while the
+    free slots are all spoken for by slotless higher-priority clients
+    ("no starvation of the higher class");
+  * ``release``/``release_link``/``reset`` return the scheduler to a clean
+    state: every lease freed, the backlog estimate cleared, and a fresh
+    allocate behaving exactly like a new scheduler's.
+
+Random op sequences are the point: the simulator only ever drives the
+scheduler through one well-behaved call pattern, while these tests
+interleave allocate/register/release_link/release arbitrarily.
+"""
+from __future__ import annotations
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+
+from repro.core import EdgeServerScheduler, make_fleet, network_mbps  # noqa: E402
+from repro.core.edge_server import effective_weight, fair_share  # noqa: E402
+
+# Example counts come from the shared profiles in conftest.py
+# (HYPOTHESIS_PROFILE=ci|nightly); settings() snapshots the active profile.
+SETTINGS = settings()
+
+MBPS = 10.0
+
+
+@st.composite
+def fleet_configs(draw):
+    n = draw(st.integers(1, 6))
+    weights = draw(
+        st.lists(st.floats(0.1, 8.0), min_size=n, max_size=n)
+    )
+    priorities = draw(st.lists(st.integers(0, 3), min_size=n, max_size=n))
+    capacity = draw(st.integers(0, 5))
+    policy = draw(st.sampled_from(("weighted_fair", "priority")))
+    return n, weights, priorities, capacity, policy
+
+
+@st.composite
+def op_sequences(draw):
+    """(kind, client) ops; clients resolved modulo fleet size at replay."""
+    return draw(
+        st.lists(
+            st.tuples(
+                st.sampled_from(("allocate", "release_link", "release")),
+                st.integers(0, 5),
+            ),
+            max_size=40,
+        )
+    )
+
+
+def _build(config):
+    n, weights, priorities, capacity, policy = config
+    fleet = make_fleet(n, weights=weights, priorities=priorities)
+    return fleet, EdgeServerScheduler(fleet, policy=policy, capacity=capacity)
+
+
+def _replay(sched, fleet, ops, net):
+    """Drive the scheduler through an arbitrary op sequence; every granted
+    allocate immediately registers (the worst case for reservation)."""
+    t = 0.0
+    for kind, idx in ops:
+        cid = fleet[idx % len(fleet)].client_id
+        if kind == "allocate":
+            grant = sched.allocate(cid, t, net)
+            if grant > 0.0:
+                sched.register(cid, grant, t=t, server_s=0.05)
+        elif kind == "release_link":
+            sched.release_link(cid)
+        else:
+            sched.release(cid)
+        t += 0.01
+
+
+@SETTINGS
+@given(fleet_configs(), op_sequences())
+def test_link_reservation_never_exceeds_capacity(config, ops):
+    fleet, sched = _build(config)
+    net = network_mbps(MBPS)
+    for kind, idx in ops:
+        cid = fleet[idx % len(fleet)].client_id
+        if kind == "allocate":
+            grant = sched.allocate(cid, 0.0, net)
+            if grant > 0.0:
+                sched.register(cid, grant)
+            # The invariant must hold after EVERY mutation, not just at end.
+            assert sched._link_reserved() <= net.bandwidth_bps + 1e-6
+            assert sched._n_leases() <= sched.capacity + len(fleet)
+        elif kind == "release_link":
+            sched.release_link(cid)
+        else:
+            sched.release(cid)
+    assert sched._link_reserved() <= net.bandwidth_bps + 1e-6
+    assert sched.audit.max_concurrent_bps <= net.bandwidth_bps + 1e-6
+
+
+@SETTINGS
+@given(fleet_configs())
+def test_clean_scheduler_grants_are_weight_proportional(config):
+    n, weights, priorities, capacity, _ = config
+    fleet = make_fleet(n, weights=weights, priorities=priorities)
+    sched = EdgeServerScheduler(fleet, policy="weighted_fair", capacity=max(capacity, 1))
+    net = network_mbps(MBPS)
+    total = sum(weights)
+    for c in fleet:
+        grant = sched.allocate(c.client_id, 0.0, net)
+        # Nothing is leased (grants are quotes until register), so every
+        # client sees exactly its static share.
+        assert grant == pytest.approx(
+            fair_share(net.bandwidth_bps, c.weight, total), rel=1e-12
+        )
+    # And the shares are mutually proportional within rounding.
+    g0 = sched.allocate(fleet[0].client_id, 0.0, net)
+    for c in fleet[1:]:
+        g = sched.allocate(c.client_id, 0.0, net)
+        assert g * fleet[0].weight == pytest.approx(g0 * c.weight, rel=1e-9)
+
+
+@SETTINGS
+@given(fleet_configs(), op_sequences())
+def test_priority_reserves_slots_for_higher_classes(config, ops):
+    """Whenever the priority policy grants a slot-consuming lease, the free
+    slots before that grant must exceed the number of slotless strictly
+    higher-priority clients — otherwise the higher class could starve."""
+    n, weights, priorities, capacity, _ = config
+    fleet = make_fleet(n, weights=weights, priorities=priorities)
+    sched = EdgeServerScheduler(fleet, policy="priority", capacity=capacity)
+    net = network_mbps(MBPS)
+    for kind, idx in ops:
+        c = fleet[idx % len(fleet)]
+        if kind == "allocate":
+            free_before = sched.capacity - sched._n_leases()
+            higher_waiting = sum(
+                1
+                for other in fleet
+                if other.priority > c.priority
+                and not sched.leases.get(other.client_id)
+            )
+            grant = sched.allocate(c.client_id, 0.0, net)
+            if grant > 0.0:
+                assert free_before > higher_waiting, (
+                    f"client p={c.priority} got a slot while {higher_waiting} "
+                    f"higher-priority clients waited on {free_before} free slots"
+                )
+                sched.register(c.client_id, grant)
+        elif kind == "release_link":
+            sched.release_link(c.client_id)
+        else:
+            sched.release(c.client_id)
+
+
+@SETTINGS
+@given(fleet_configs(), op_sequences())
+def test_release_and_reset_restore_clean_state(config, ops):
+    fleet, sched = _build(config)
+    net = network_mbps(MBPS)
+    _replay(sched, fleet, ops, net)
+
+    # Releasing every lease one by one empties the table completely.
+    for c in fleet:
+        while sched.leases.get(c.client_id):
+            sched.release_link(c.client_id)
+            sched.release(c.client_id)
+    assert sched._n_leases() == 0
+    assert sched.leases == {}
+    assert sched._link_reserved() == 0.0
+
+    # reset() additionally clears the backlog estimate and audit counters,
+    # and a fresh allocate matches a brand-new scheduler's bit for bit.
+    _replay(sched, fleet, ops, net)
+    sched.reset()
+    assert sched.leases == {}
+    assert sched.server_busy_until == 0.0
+    assert sched.audit.grants == 0 and sched.audit.denials == 0
+    _, fresh = _build(config)
+    for c in fleet:
+        assert sched.allocate(c.client_id, 0.0, net) == fresh.allocate(
+            c.client_id, 0.0, net
+        )
+
+
+def test_effective_weight_matches_scheduler():
+    fleet = make_fleet(3, weights=[1.0, 2.0, 4.0], priorities=[0, 1, 2])
+    sched = EdgeServerScheduler(fleet, policy="priority")
+    for c in fleet:
+        assert sched._effective_weight(c) == effective_weight("priority", c.weight, c.priority)
+        assert effective_weight("weighted_fair", c.weight, c.priority) == c.weight

@@ -19,6 +19,7 @@ from repro.runtime import plan_elastic_remesh
 from repro.train.optim import AdamWConfig
 
 
+@pytest.mark.slow
 def test_fail_replan_restore_continue(tmp_path):
     a = configs.get("resnet-50", smoke=True)
     a = dataclasses.replace(a, shapes=(ShapeSpec("t", "classify_train", 4, img=32),))

@@ -17,7 +17,9 @@ from repro.kernels.flash_attention import ref as fr
 from repro.kernels.npu_matmul import ops as nops
 from repro.kernels.npu_matmul import ref as nref
 
-SETTINGS = settings(max_examples=10, deadline=None, suppress_health_check=[HealthCheck.too_slow])
+# Example counts come from the shared profiles in conftest.py
+# (HYPOTHESIS_PROFILE=ci|nightly); settings() snapshots the active profile.
+SETTINGS = settings()
 
 
 @pytest.mark.parametrize(

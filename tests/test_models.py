@@ -42,6 +42,7 @@ def _all_finite(tree) -> bool:
     )
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch_name", configs.ALL)
 def test_arch_smoke(arch_name):
     a = configs.get(arch_name, smoke=True)
@@ -135,6 +136,7 @@ def test_moe_matches_dense_when_single_expert():
     np.testing.assert_allclose(np.asarray(out), np.asarray(dense), rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_quant_variant_close_but_not_equal():
     from repro import quant
     from repro.arch import classifier_forward

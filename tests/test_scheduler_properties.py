@@ -30,9 +30,9 @@ from repro.core import (
 from repro.core import brute_force, max_accuracy, max_utility
 from repro.core.schedule import validate_plan
 
-SETTINGS = settings(
-    max_examples=25, deadline=None, suppress_health_check=[HealthCheck.too_slow]
-)
+# Example counts come from the shared profiles in conftest.py
+# (HYPOTHESIS_PROFILE=ci|nightly); settings() snapshots the active profile.
+SETTINGS = settings()
 
 
 @st.composite

@@ -74,6 +74,7 @@ def test_registry_flag_matches_backend_table():
     assert set(BATCHED_PARAMS) == flagged  # new batched policies join the sweep
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", sorted(BATCHED_PARAMS))
 def test_batched_backend_matches_reference_exactly(name):
     base_params, axis = BATCHED_PARAMS[name]

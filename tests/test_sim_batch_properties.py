@@ -28,9 +28,9 @@ from repro.core import PolicySpec, StreamSpec, Trace, profile_ms, simulate  # no
 from repro.core.sim_batch import BatchScenario, simulate_batch  # noqa: E402
 from repro.session import ScenarioSpec, Session, SweepGrid, SweepReport  # noqa: E402
 
-SETTINGS = settings(
-    max_examples=10, deadline=None, suppress_health_check=[HealthCheck.too_slow]
-)
+# Example counts come from the shared profiles in conftest.py
+# (HYPOTHESIS_PROFILE=ci|nightly); settings() snapshots the active profile.
+SETTINGS = settings()
 
 STATS_FIELDS = (
     "accuracy_sum",

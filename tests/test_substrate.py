@@ -96,6 +96,7 @@ def test_async_checkpointer(tmp_path):
     assert ck.latest_step(tmp_path) == 3
 
 
+@pytest.mark.slow
 def test_train_restart_determinism(tmp_path):
     """Training N steps straight == training k, restarting, training N-k."""
     from repro.launch import train as T
@@ -252,6 +253,7 @@ print("OK")
     assert "OK" in out.stdout, out.stderr
 
 
+@pytest.mark.slow
 def test_grad_accumulation_matches_full_batch():
     """accum_steps=2 on the same global batch == a single full-batch step
     (the elastic lever that preserves batch semantics on a shrunk mesh)."""

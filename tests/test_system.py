@@ -12,6 +12,7 @@ import numpy as np
 import pytest
 
 
+@pytest.mark.slow
 def test_serving_end_to_end_deadlines():
     """Serve a synthetic video through the full stack; all executed frames
     must have met their planned deadline and accuracy must beat chance."""
