@@ -1,17 +1,29 @@
 """Fleet-sweep engine benchmark: reference loop vs batched jit/vmap backend.
 
-Runs the same (deadline x fps x bandwidth) scenario grid through both
-``Session.run_sweep`` backends at grid sizes {10, 100, 1000} and reports
-wall-clock plus an exactness check (the batched backend must reproduce the
-reference stats bit-for-bit — the speedup is worthless otherwise).  Results
-land in ``BENCH_sweep.json`` so CI can track the perf trajectory:
+Two ladders run the same grids through both ``Session.run_sweep`` backends
+at {10, 100, 1000} points and report wall-clock plus the equivalence bit
+(integer stats exact; accuracy sums within ``AUDIT_TOL`` — the speedup is
+worthless otherwise):
 
-    PYTHONPATH=src python benchmarks/sweep_bench.py            # full ladder
-    PYTHONPATH=src python benchmarks/sweep_bench.py --smoke    # 10-point grid
+  * the **jax ladder** (``jax_accuracy``/``jax_utility``): network-aware
+    (bandwidth × deadline × fps × rtt) grids — the axes parameterize the
+    scenario; these local-only policies ignore the network, and their
+    per-round reference pays a jitted-kernel dispatch, which is what the
+    vectorized engine amortizes.  **Acceptance bar: >= 10x warm at the
+    1000-point grid** (tracked since PR 3, now on a network-aware grid).
+  * the **network ladder** (``max_accuracy``/``max_utility``): the paper's
+    offload-capable planners on network-aware grids — piecewise traces with
+    an rtt axis at 10/100 points, a low-bandwidth (bandwidth × deadline ×
+    fps × rtt) grid at 1000.  Their *reference* is plain numpy/Python (no
+    per-round jit dispatch), so on a small-CPU host the batched engine
+    roughly breaks even — the recorded ``speedup_warm`` is the honest
+    number, gated on equivalence only (the row exists to track the perf
+    trajectory on parallel hardware, where the lanes are free).
 
-Acceptance criterion tracked here: at the 1000-point grid the batched
-backend is >= 10x faster than the reference loop (warm, i.e. compiled;
-``batched_cold_s`` includes jit compilation and is reported alongside).
+Results land in ``BENCH_sweep.json`` so CI can track the trajectory:
+
+    PYTHONPATH=src python benchmarks/sweep_bench.py            # full ladders
+    PYTHONPATH=src python benchmarks/sweep_bench.py --smoke    # 10-point grids
 """
 from __future__ import annotations
 
@@ -24,16 +36,22 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.core import PolicySpec  # noqa: E402
-from repro.session import ScenarioSpec, Session, SweepGrid  # noqa: E402
+from repro.core.audit import AUDIT_TOL  # noqa: E402
+from repro.session import ScenarioSpec, Session, SweepGrid, TraceSpec  # noqa: E402
 
 N_FRAMES = 120
 POLICIES = (("jax_accuracy", {}), ("jax_utility", {"alpha": 200.0}))
+NET_POLICIES = (("max_accuracy", {}), ("max_utility", {"alpha": 200.0}))
 SIZES = (10, 100, 1000)
 DEFAULT_OUT = "BENCH_sweep.json"
 
+PIECEWISE = TraceSpec(
+    kind="piecewise", points=((0.0, 3.0), (0.3, 0.8), (0.9, 6.0)), rtt_ms=60.0
+)
+
 
 def make_grid(size: int) -> SweepGrid:
-    """A (deadline x fps x bandwidth) grid with exactly ``size`` points."""
+    """A network-aware grid with exactly ``size`` points (jax ladder)."""
     if size == 10:
         return SweepGrid(deadline_ms=(150.0, 200.0, 250.0, 300.0, 350.0), fps=(20.0, 40.0))
     if size == 100:
@@ -44,16 +62,46 @@ def make_grid(size: int) -> SweepGrid:
         )
     if size == 1000:
         return SweepGrid(
-            deadline_ms=tuple(120.0 + 10.0 * i for i in range(20)),
+            deadline_ms=tuple(120.0 + 20.0 * i for i in range(10)),
             fps=(10.0, 20.0, 30.0, 40.0, 50.0),
-            bandwidth_mbps=tuple(0.5 * (i + 1) for i in range(10)),
+            bandwidth_mbps=(0.5, 1.0, 2.0, 4.0, 8.0),
+            rtt_ms=(40.0, 70.0, 100.0, 130.0),
         )
     raise ValueError(f"no predefined grid of size {size}")
 
 
-def _stats_equal(a, b) -> bool:
+def make_net_grid(size: int) -> tuple[SweepGrid, TraceSpec]:
+    """Network ladder: grid + base trace for the paper's planners.
+
+    10/100-point grids replay a *piecewise* trace on device (deadline ×
+    fps × rtt axes preserve it); the 1000-point grid sweeps a constant
+    low-bandwidth regime where offload/local candidate selection really
+    flips per point.
+    """
+    if size == 10:
+        return SweepGrid(
+            deadline_ms=(150.0, 200.0, 250.0, 300.0, 350.0), rtt_ms=(50.0, 100.0)
+        ), PIECEWISE
+    if size == 100:
+        return SweepGrid(
+            deadline_ms=tuple(150.0 + 20.0 * i for i in range(10)),
+            fps=(10.0, 20.0, 30.0, 40.0, 50.0),
+            rtt_ms=(50.0, 100.0),
+        ), PIECEWISE
+    if size == 1000:
+        return SweepGrid(
+            deadline_ms=tuple(240.0 + 16.0 * i for i in range(10)),
+            fps=(30.0, 48.0, 50.0, 56.0, 60.0),
+            bandwidth_mbps=(0.3, 0.5, 0.8, 1.1, 1.4),
+            rtt_ms=(40.0, 70.0, 100.0, 130.0),
+        ), TraceSpec(mbps=1.0)
+    raise ValueError(f"no predefined network grid of size {size}")
+
+
+def _stats_equiv(a, b) -> bool:
+    """The certified cross-backend contract: ints exact, floats in tol."""
     return (
-        a.accuracy_sum == b.accuracy_sum
+        abs(a.accuracy_sum - b.accuracy_sum) <= AUDIT_TOL
         and a.frames_processed == b.frames_processed
         and a.frames_missed_deadline == b.frames_missed_deadline
         and a.frames_offloaded == b.frames_offloaded
@@ -61,11 +109,14 @@ def _stats_equal(a, b) -> bool:
     )
 
 
-def bench_cell(policy: str, params: dict, size: int) -> dict:
-    grid = make_grid(size)
+def bench_cell(policy: str, params: dict, size: int, *, net: bool = False) -> dict:
+    if net:
+        grid, trace = make_net_grid(size)
+    else:
+        grid, trace = make_grid(size), TraceSpec(mbps=2.5)
     session = Session(
         ScenarioSpec(policy=PolicySpec(policy, params), n_frames=N_FRAMES,
-                     label=f"sweep_bench/{policy}/{size}")
+                     trace=trace, label=f"sweep_bench/{policy}/{size}")
     )
     t0 = time.perf_counter()
     ref = session.run_sweep(grid, backend="reference")
@@ -76,11 +127,14 @@ def bench_cell(policy: str, params: dict, size: int) -> dict:
     t0 = time.perf_counter()
     bat = session.run_sweep(grid, backend="batched")
     batched_warm_s = time.perf_counter() - t0
+    assert bat.backend == "batched", bat.meta
     exact = all(
-        _stats_equal(pr.stats, pb.stats) for pr, pb in zip(ref.points, bat.points)
+        _stats_equiv(pr.stats, pb.stats) for pr, pb in zip(ref.points, bat.points)
     )
     return {
         "policy": policy,
+        "ladder": "network" if net else "jax",
+        "trace": trace.kind,
         "grid_points": len(grid),
         "n_frames": N_FRAMES,
         "reference_s": reference_s,
@@ -92,8 +146,13 @@ def bench_cell(policy: str, params: dict, size: int) -> dict:
     }
 
 
-def run(sizes=SIZES, policies=POLICIES) -> dict:
-    cells = [bench_cell(pol, params, size) for size in sizes for pol, params in policies]
+def run(sizes=SIZES) -> dict:
+    cells = [bench_cell(pol, params, size) for size in sizes for pol, params in POLICIES]
+    cells += [
+        bench_cell(pol, params, size, net=True)
+        for size in sizes
+        for pol, params in NET_POLICIES
+    ]
     return {"bench": "sweep", "n_frames": N_FRAMES, "cells": cells}
 
 
@@ -114,7 +173,7 @@ ALL = [sweep_backend_smoke]
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
-                    help="smallest grid only (CI smoke; still emits the JSON artifact)")
+                    help="smallest grids only (CI smoke; still emits the JSON artifact)")
     ap.add_argument("--out", default=DEFAULT_OUT, help=f"output path (default {DEFAULT_OUT})")
     args = ap.parse_args(argv)
 
@@ -123,15 +182,19 @@ def main(argv=None) -> int:
         json.dump(result, fh, indent=2)
         fh.write("\n")
 
-    print(f"{'policy':>14} {'points':>7} {'ref (s)':>9} {'cold (s)':>9} "
+    print(f"{'ladder':>8} {'policy':>14} {'points':>7} {'ref (s)':>9} {'cold (s)':>9} "
           f"{'warm (s)':>9} {'speedup':>8} {'exact':>6}")
     ok = True
     for c in result["cells"]:
-        print(f"{c['policy']:>14} {c['grid_points']:>7} {c['reference_s']:>9.2f} "
-              f"{c['batched_cold_s']:>9.2f} {c['batched_warm_s']:>9.2f} "
-              f"{c['speedup_warm']:>7.1f}x {str(c['exact_match']):>6}")
+        print(f"{c['ladder']:>8} {c['policy']:>14} {c['grid_points']:>7} "
+              f"{c['reference_s']:>9.2f} {c['batched_cold_s']:>9.2f} "
+              f"{c['batched_warm_s']:>9.2f} {c['speedup_warm']:>7.1f}x "
+              f"{str(c['exact_match']):>6}")
         ok &= c["exact_match"]
-        if c["grid_points"] >= 1000:
+        # the >= 10x acceptance bar applies to the jax ladder's 1000-point
+        # network-aware cells (see module docstring for the network
+        # ladder's honest-CPU-number rationale).
+        if c["ladder"] == "jax" and c["grid_points"] >= 1000:
             ok &= c["speedup_warm"] >= 10.0
     print(f"\nwrote {args.out}")
     return 0 if ok else 1

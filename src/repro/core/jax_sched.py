@@ -20,6 +20,16 @@ are pass-through no-ops (identity parents, choice ``-1``), which lets a
 ``vmap`` over scenarios with different window lengths share one padded
 compiled shape.  Registered policies here declare ``batched=True`` so
 ``Session.run_sweep`` can route them through the vectorized backend.
+
+A second kernel pair (``_accuracy_dp64`` / ``_utility_dp64``) serves the
+*network-aware* batched planners for the paper's own ``max_accuracy`` /
+``max_utility`` policies: those Python references run their DPs in float64,
+so the twins pin f64 (they must trace inside ``enable_x64``) and reproduce
+every sequential tie-break of the reference loops.  The offload phase —
+upload time from the granted bandwidth, RTT, edge-vs-NPU choice for the
+head frame — lives in the round programs of :mod:`repro.core.sim_batch`,
+which feed these kernels the local-phase instances each round's bandwidth
+implies.
 """
 from __future__ import annotations
 
@@ -333,6 +343,235 @@ def local_utility_dp_jax(
             break
     decisions.reverse()
     return best_u, decisions
+
+
+# ---------------------------------------------------------------------------
+# Reference-faithful float64 twins.  The paper's max_accuracy / max_utility
+# policies accumulate their DPs in float64 (numpy arrays / Python floats),
+# so the network-aware batched planners (core/sim_batch) cannot reuse the
+# f32 kernels above without drifting on ties.  These twins pin f64 — they
+# must be traced inside ``jax.experimental.enable_x64`` — and keep every
+# sequential tie-break of the reference updates (first model wins ties,
+# case A beats case B within a model, stable (t, -u) candidate order).
+# ---------------------------------------------------------------------------
+
+
+def _no_fma(product: jax.Array, gate: jax.Array) -> jax.Array:
+    """Force ``product`` to round to float64 before it reaches an add.
+
+    XLA CPU's LLVM backend contracts ``mul`` + ``add`` into ``fma`` inside
+    fused loops, keeping the product at extended precision — one ulp off
+    the Python reference, which is enough to flip a DP tie-break and pick a
+    genuinely different schedule.  Neither XLA flags, nor
+    ``lax.optimization_barrier``, nor paired bitcasts survive to codegen;
+    a select on a *traced* (never constant-foldable, always-true at
+    runtime) predicate does: LLVM will not contract across the select
+    instruction, so the product is rounded exactly as the reference's
+    intermediate assignment rounds it.  Apply to every f64 multiply whose
+    result feeds an add on a reference-bit-exact path.
+    """
+    return jnp.where(gate, product, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_frames", "nbins"))
+def _accuracy_dp64(
+    dur: jax.Array,  # [J] duration bins (int32; ceil(t_npu/grid), clamped to nbins)
+    acc: jax.Array,  # [J] f64 raw acc_npu table values (the DP objective)
+    arr_bins: jax.Array,  # [n_frames] int32
+    dl_bins: jax.Array,  # [n_frames] int32
+    start_bin: jax.Array,  # [] int32
+    *,
+    n_frames: int,
+    nbins: int,
+):
+    """f64 twin of ``max_accuracy.local_dp`` with per-step *prefix records*.
+
+    One scan serves every window length ``nn <= n_frames``: frame ``k``'s
+    recurrence touches only frame-local bins (its own ``arr_bin``/``dl_bin``),
+    so the DP over frames ``0..nn-1`` is a strict prefix of the DP over
+    ``0..n_frames-1``.  The per-step records ``(maxH, argmax bin, alive)``
+    therefore equal what ``local_dp(n_frames=nn)`` returns for every ``nn``
+    — the Max-Accuracy round program reads the record at ``nn = n_l(B)``
+    for each offload resolution and at the largest alive ``nn`` for the
+    pure-local candidate, all from a single kernel call.  Deadness
+    propagates (a dead ``H`` can never revive), so ``alive`` is
+    prefix-monotone, exactly like the reference's per-frame early-out.
+    """
+    J = dur.shape[0]
+    bins = jnp.arange(nbins, dtype=jnp.int32)
+    H0 = jnp.full((nbins,), NEG, dtype=jnp.float64)
+    H0 = H0.at[jnp.clip(start_bin, 0, nbins - 1)].set(0.0)
+
+    def step(H, k):
+        arr_bin = arr_bins[k]
+        dl_bin = dl_bins[k]
+        masked = jnp.where(bins <= arr_bin, H, NEG)
+        pre_val = jnp.max(masked)
+        pre_arg = jnp.argmax(masked).astype(jnp.int32)
+
+        def per_model(j):
+            d = dur[j]
+            a = acc[j]
+            fbA = arr_bin + d
+            okA = (fbA <= dl_bin) & (fbA < nbins) & (pre_val > NEG / 2)
+            valA = jnp.where((bins == fbA) & okA, pre_val + a, NEG)
+            parA = jnp.where((bins == fbA) & okA, pre_arg, -1)
+            src = bins - d
+            okB = (src > arr_bin) & (src >= 0) & (bins <= dl_bin)
+            gathered = jnp.where(okB, H[jnp.clip(src, 0, nbins - 1)], NEG)
+            valB = jnp.where(gathered > NEG / 2, gathered + a, NEG)
+            parB = jnp.where(valB > NEG / 2, jnp.clip(src, 0, nbins - 1), -1)
+            val = jnp.where(valA >= valB, valA, valB)
+            par = jnp.where(valA >= valB, parA, parB)
+            return val, par
+
+        vals, pars = jax.vmap(per_model)(jnp.arange(J, dtype=jnp.int32))  # [J, nbins]
+        best_j = jnp.argmax(vals, axis=0)
+        Hn = jnp.take_along_axis(vals, best_j[None], axis=0)[0]
+        parent = jnp.take_along_axis(pars, best_j[None], axis=0)[0]
+        choice = jnp.where(Hn > NEG / 2, best_j.astype(jnp.int32), -1)
+        parent = jnp.where(Hn > NEG / 2, parent, -1)
+        maxH = jnp.max(Hn)
+        argb = jnp.argmax(Hn).astype(jnp.int32)
+        return Hn, (choice, parent, maxH, argb, maxH > NEG / 2)
+
+    _, (choices, parents, maxH, argb, alive) = jax.lax.scan(
+        step, H0, jnp.arange(n_frames, dtype=jnp.int32)
+    )
+    return choices, parents, maxH, argb, alive
+
+
+@functools.partial(jax.jit, static_argnames=("n_frames", "width"))
+def _utility_dp64(
+    t_npu: jax.Array,  # [J] f64 (inf for server-only models)
+    acc: jax.Array,  # [J] f64 raw acc_npu table values
+    n_active: jax.Array,  # [] int32; frames >= this are pass-through no-ops
+    *,
+    n_frames: int,
+    width: int,
+    gamma: jax.Array,
+    deadline: jax.Array,
+    alpha: jax.Array,
+    npu_free: jax.Array,
+    first_arrival: jax.Array,
+    window: jax.Array,
+):
+    """f64 twin of ``max_utility.local_utility_dp`` (Pareto triples).
+
+    Candidate enumeration order (carried triples first, then processed
+    candidates slot-major — exactly the reference's ``for tri in U: for j``
+    loops), the stable ``(t, -u)`` sort, the 1e-12 dominance epsilon, and
+    the cap-overflow rule all mirror the Python reference.  On overflow the
+    reference keeps the ``cap`` highest-utility front entries re-sorted by
+    ``t`` — since ``u`` rises strictly along the front, that is exactly the
+    LAST ``width`` keepers in t-order, rendered here as a rank offset in the
+    compaction.
+
+    ``width`` below ``max_utility._prune``'s cap (256) is a *fast path*:
+    results are exact as long as no front ever outgrows it, and the
+    returned ``overflow`` flag reports whether one did (gated to live
+    frames).  Callers must rerun overflowing instances at ``width = 256``,
+    where the truncation rule coincides with the reference cap — the sort
+    is the kernel's dominant cost and scales ~``width log width``, so the
+    narrow first pass is worth the occasional rerun.
+    """
+    J = t_npu.shape[0]
+    BIG_T = jnp.float64(1e9)
+    n_active = jnp.asarray(n_active, jnp.int32)
+    rounded = n_active >= 0  # traced, always true: _no_fma's opaque gate
+    t0 = jnp.full((width,), BIG_T, jnp.float64).at[0].set(jnp.maximum(npu_free, 0.0))
+    u0 = jnp.full((width,), NEG, jnp.float64).at[0].set(0.0)
+    m0 = jnp.zeros((width,), jnp.int32)
+    valid0 = jnp.zeros((width,), bool).at[0].set(True)
+    slots = jnp.arange(width, dtype=jnp.int32)
+    M = width * (J + 1)
+
+    def step(state, k):
+        t, u, m, valid = state
+        arrival = first_arrival + _no_fma(k.astype(jnp.float64) * gamma, rounded)
+
+        def proc(j):
+            t2 = jnp.maximum(t, arrival) + t_npu[j]
+            ok = valid & (t2 <= arrival + deadline + 1e-12)
+            mf = m.astype(jnp.float64)
+            mean_term = _no_fma(
+                (mf / (mf + 1.0)) * (u - mf / window), rounded
+            ) + alpha * acc[j] / (mf + 1.0)
+            u2 = mean_term + (mf + 1.0) / window
+            return (
+                jnp.where(ok, t2, BIG_T),
+                jnp.where(ok, u2, NEG),
+                jnp.where(ok, m + 1, 0),
+                ok,
+            )
+
+        pt, pu, pm, pok = jax.vmap(proc)(jnp.arange(J, dtype=jnp.int32))  # [J, width]
+        # Slot-major processed candidates (transpose before flatten): the
+        # stable sort's tie order must equal the reference's cands list.
+        ct = jnp.concatenate([t, pt.T.reshape(-1)])
+        cu = jnp.concatenate([u, pu.T.reshape(-1)])
+        cm = jnp.concatenate([m, pm.T.reshape(-1)])
+        cok = jnp.concatenate([valid, pok.T.reshape(-1)])
+        cparent = jnp.concatenate([slots, jnp.repeat(slots, J)])
+        caction = jnp.concatenate(
+            [jnp.full((width,), -1, jnp.int32), jnp.tile(jnp.arange(J, dtype=jnp.int32), width)]
+        )
+        cu = jnp.where(cok, cu, NEG)
+        ct = jnp.where(cok, ct, BIG_T)
+        # Stable sort by (t asc, u desc): invalid candidates carry
+        # (BIG_T, NEG) keys and sort strictly after every valid entry.
+        idx = jnp.arange(M, dtype=jnp.int32)
+        perm = jax.lax.sort((ct, -cu, idx), num_keys=2, is_stable=True)[2]
+        ct, cu, cm = ct[perm], cu[perm], cm[perm]
+        cparent, caction = cparent[perm], caction[perm]
+        # The reference's dominance bar is the last KEPT utility, not the
+        # running max of all candidates: a candidate rejected inside the
+        # 1e-12 epsilon must not raise the bar for its successors (a plain
+        # cummax would, dropping front entries the reference keeps when
+        # utilities collide within the epsilon).  The fold is inherently
+        # sequential; chunking it (16 unrolled folds per scan step) keeps
+        # the scan shallow without changing the semantics.
+        CH = 16
+        pad = (-cu.shape[0]) % CH
+        cu_p = jnp.concatenate([cu, jnp.full((pad,), NEG, cu.dtype)])
+
+        def keep_chunk(bar, u_chunk):
+            keeps = []
+            for i in range(CH):
+                k = u_chunk[i] > bar + 1e-12
+                bar = jnp.where(k, u_chunk[i], bar)
+                keeps.append(k)
+            return bar, jnp.stack(keeps)
+
+        _, keep = jax.lax.scan(
+            keep_chunk, jnp.float64(NEG), cu_p.reshape(-1, CH)
+        )
+        keep = keep.reshape(-1)[: cu.shape[0]]
+        csum = jnp.cumsum(keep.astype(jnp.int32))
+        count = csum[-1]
+        drop = jnp.maximum(count - width, 0)  # cap overflow: shed lowest-u keepers
+        pos = jnp.clip(jnp.searchsorted(csum, drop + 1 + slots), 0, M - 1)
+        filled = slots < (count - drop)
+        nt = jnp.where(filled, ct[pos], BIG_T)
+        nu = jnp.where(filled, cu[pos], NEG)
+        nm = jnp.where(filled, cm[pos], 0)
+        nparent = jnp.where(filled, cparent[pos], -1)
+        naction = jnp.where(filled, caction[pos], -1)
+        # Padded frame (k >= n_active): identity pass-through, no decision.
+        on = k < n_active
+        step_overflow = on & (count > width)
+        nt = jnp.where(on, nt, t)
+        nu = jnp.where(on, nu, u)
+        nm = jnp.where(on, nm, m)
+        nok = jnp.where(on, filled, valid)
+        nparent = jnp.where(on, nparent, slots)
+        naction = jnp.where(on, naction, -1)
+        return (nt, nu, nm, nok), (nparent, naction, step_overflow)
+
+    state, (parents, actions, overflows) = jax.lax.scan(
+        step, (t0, u0, m0, valid0), jnp.arange(n_frames, dtype=jnp.int32)
+    )
+    return state, parents, actions, jnp.any(overflows)
 
 
 # ---------------------------------------------------------------------------

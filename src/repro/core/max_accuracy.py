@@ -191,6 +191,11 @@ def local_window_plan(
     "max_accuracy",
     params=(Param.number("grid", 1e-3, doc="local-phase DP time grid (s)"),),
     doc="Paper §IV Algorithm 1: per-round Max-Accuracy offload + local DP.",
+    # Network-aware vectorized backend (core/sim_batch): whole scenario
+    # grids — constant AND piecewise traces — run as one jit+vmap program.
+    # No batched_multi: these plans offload, so a fleet is NOT N independent
+    # replicas and fleet grids fall back to the reference loop.
+    batched=True,
 )
 def plan_round(
     models: Sequence[ModelProfile],

@@ -166,6 +166,11 @@ def _local_decisions(
     "max_utility",
     params=(Param.number("alpha", doc="paper Eq. (9) accuracy weight (required)"),),
     doc="Paper §V Algorithm 2: per-round Max-Utility (rate + alpha * accuracy).",
+    # Network-aware vectorized backend (core/sim_batch): whole scenario
+    # grids — constant AND piecewise traces — run as one jit+vmap program.
+    # No batched_multi: these plans offload, so a fleet is NOT N independent
+    # replicas and fleet grids fall back to the reference loop.
+    batched=True,
 )
 def plan_round(
     models: Sequence[ModelProfile],

@@ -29,11 +29,30 @@ same order.  Three mechanisms make that possible:
     kernels) and the Max-Accuracy time grid pads to the batch-max bin count
     (padded bins provably stay ``NEG`` and cannot enter any argmax).
 
-Only policies registered with ``batched=True`` (the local-plan jitted DPs
-``jax_accuracy`` / ``jax_utility``) have a planner here; ``Session
-.run_sweep`` falls back to the reference loop for everything else.  Their
-plans never offload, so ``frames_offloaded`` is always 0 and no network
-state is simulated on device (see docs/simulation.md).
+Policies registered with ``batched=True`` have a planner here; ``Session
+.run_sweep`` falls back to the reference loop for everything else.  Two
+planner families exist:
+
+  * the local-plan jitted DPs ``jax_accuracy`` / ``jax_utility`` — their
+    plans never offload, so ``frames_offloaded`` is always 0 and no network
+    state is consulted;
+  * the paper's own ``max_accuracy`` / ``max_utility`` heuristics — these
+    are *network-aware*: each scenario carries an on-device network model
+    (``BatchScenario.rtt`` plus piecewise-constant bandwidth segments),
+    every round looks the bandwidth up at its start time exactly as the
+    reference calls ``trace.at(t0)``, and the round program renders the
+    offload phase (per-resolution upload times, feasible-server-model
+    argmax, normalized-score candidate selection) as array expressions
+    around the f64 DP twins of :mod:`repro.core.jax_sched`.  Segment
+    arrays pad to the batch maximum with ``t_start = +inf`` sentinels,
+    which a right-bisecting step lookup can provably never select.
+
+Their equivalence scope differs: the jax_* planners are bit-identical to
+the reference by construction (same f32 kernels), while the network-aware
+planners replay float64 Python references — the certified contract is
+integer stats exact and accuracy sums within :data:`~repro.core.audit
+.AUDIT_TOL` (in practice the golden grids come out bit-equal too; see
+docs/simulation.md).
 """
 from __future__ import annotations
 
@@ -48,7 +67,14 @@ import numpy as np
 from jax.experimental import enable_x64
 
 from .audit import AUDIT_TOL
-from .jax_sched import NEG, _accuracy_dp, _utility_dp
+from .jax_sched import (
+    NEG,
+    _accuracy_dp,
+    _accuracy_dp64,
+    _no_fma,
+    _utility_dp,
+    _utility_dp64,
+)
 from .profiles import ModelProfile, StreamSpec
 from .schedule import StreamStats
 
@@ -58,13 +84,22 @@ __all__ = ["BatchScenario", "batched_policies", "simulate_batch"]
 @dataclass(frozen=True)
 class BatchScenario:
     """One grid point as the batched backend sees it: a stream shape, a frame
-    budget, and the policy's *resolved* parameter dict (defaults filled in,
-    e.g. ``PolicySpec(...).resolved``).  Network state is deliberately absent
-    — batched policies are local-only plans and never consult it."""
+    budget, the policy's *resolved* parameter dict (defaults filled in, e.g.
+    ``PolicySpec(...).resolved``), and the on-device network model.
+
+    ``bw_segments`` is the piecewise-constant bandwidth trace as sorted
+    ``(t_start_s, bandwidth_bps)`` segments — a constant trace is a single
+    segment at ``t_start = 0``; before the first segment's start the first
+    value applies (``simulator.Trace.piecewise`` semantics).  The local-only
+    ``jax_*`` planners never consult the network; the network-aware
+    ``max_accuracy`` / ``max_utility`` planners look bandwidth up at every
+    round's start time."""
 
     stream: StreamSpec = field(default_factory=StreamSpec)
     n_frames: int = 120
     params: Mapping[str, Any] = field(default_factory=dict)
+    rtt: float = 0.100
+    bw_segments: tuple[tuple[float, float], ...] = ((0.0, 2.5e6),)
 
 
 _PLANNERS: dict[str, Callable[..., list[StreamStats]]] = {}
@@ -198,8 +233,12 @@ def _common(
                    t_npu64, acc_dp32, acc_stat64)
 
 
-def _collect(c: _Common, out, wall_s: float) -> list[StreamStats]:
+def _collect(
+    c: _Common, out, wall_s: float, offloaded: np.ndarray | None = None
+) -> list[StreamStats]:
     acc_sum, proc, miss, rounds, npu_busy = (np.asarray(a) for a in out)
+    if offloaded is None:
+        offloaded = np.zeros(c.B, np.int32)  # local-only planners never offload
     # The whole group schedules in one device program; apportion its wall
     # time by round count so schedule_time/schedule_calls stays the honest
     # amortized per-round cost (what figure rows report as us_per_call).
@@ -209,7 +248,7 @@ def _collect(c: _Common, out, wall_s: float) -> list[StreamStats]:
             frames_total=int(c.n_frames[b]),
             frames_processed=int(proc[b]),
             frames_missed_deadline=int(miss[b]),
-            frames_offloaded=0,  # batched policies are local-only plans
+            frames_offloaded=int(offloaded[b]),
             accuracy_sum=float(acc_sum[b]),
             elapsed=float(c.n_frames[b] * c.gamma[b]),
             schedule_calls=int(rounds[b]),
@@ -221,11 +260,15 @@ def _collect(c: _Common, out, wall_s: float) -> list[StreamStats]:
 
 
 def _audit_scan(*, head, n_frames, n_active, arrivals, deadline, t_npu64, acc_stat,
-                picks, gate, free0, acc_sum, proc, miss, npu_s, W, J, strict):
-    """On-device rendering of the :mod:`repro.core.audit` contract for a
-    local-only round: sequential f64 fold over the (padded) window in frame
-    order, so accuracy accumulates exactly as the reference loop's repeated
-    ``+=``.  ``gate[k]`` says whether frame ``k`` really executes."""
+                picks, gate, free0, acc_sum, proc, miss, npu_s, W, J, strict,
+                frame_offset=0):
+    """On-device rendering of the :mod:`repro.core.audit` contract for the
+    NPU frames of a round: sequential f64 fold over the (padded) window in
+    frame order, so accuracy accumulates exactly as the reference loop's
+    repeated ``+=``.  ``gate[k]`` says whether frame ``k`` really executes;
+    ``frame_offset`` is the plan-frame id of DP frame 0 (1 when the round's
+    head frame offloaded — the offload phase accounts it before this scan,
+    preserving decision order)."""
 
     def au(carry, xs):
         free, a_s, pr, ms, nb = carry
@@ -238,7 +281,7 @@ def _audit_scan(*, head, n_frames, n_active, arrivals, deadline, t_npu64, acc_st
             bad = act & (finish > (arr_k + deadline) + AUDIT_TOL)
         else:
             bad = jnp.zeros_like(act)
-        in_range = (head + k) < n_frames
+        in_range = (head + frame_offset + k) < n_frames
         take = act & (~bad) & in_range
         a_s = a_s + jnp.where(take, acc_stat[j], 0.0)
         pr = pr + take.astype(jnp.int32)
@@ -447,3 +490,439 @@ def _run_utility(models, scenarios, strict):
         lambda s: (_quant_w(_window_frames(s.stream, s.params)), int(s.params["width"])),
         run_group,
     )
+
+
+# ---------------------------------------------------------------------------
+# Network-aware planners: the paper's Max-Accuracy / Max-Utility heuristics.
+# Each round is the reference plan_round rendered as array expressions —
+# bandwidth looked up at the round's start time, per-resolution upload
+# times, feasible-server-model argmax, the f64 local-phase DP twins of
+# jax_sched, and candidate selection on the reference's normalized scores —
+# followed by the shared audit fold.  Host-side precomputation mirrors the
+# reference expression by expression (frame bits, accuracy tables, bin
+# edges), all in float64.
+# ---------------------------------------------------------------------------
+
+# max_utility._prune's cap: the width at which _utility_dp64's truncation
+# coincides with the reference.  The planner first runs a narrow FAST width
+# (the Pareto sort dominates kernel cost and scales ~width·log(width); real
+# fronts hold a few dozen entries) and reruns only the lanes whose overflow
+# flag reports a front outgrew it — exactness is never traded for speed.
+_UTIL_CAP = 256
+_UTIL_FAST_WIDTH = 64
+
+
+def _quant_pow2(n: int) -> int:
+    return 1 << max(int(np.ceil(np.log2(max(n, 1)))), 0)
+
+
+def _trace_bw(bw_t: jax.Array, bw_v: jax.Array, t: jax.Array) -> jax.Array:
+    """Bandwidth at time ``t``: the step function ``Trace.piecewise``
+    defines — the last segment with ``t_start <= t`` wins, and before the
+    first segment's start the first value applies.  Padded sentinel
+    segments carry ``t_start = +inf``, so the right-bisection can provably
+    never select them (any finite ``t`` bisects before every ``inf``)."""
+    idx = jnp.searchsorted(bw_t, t, side="right") - 1
+    return bw_v[jnp.clip(idx, 0, bw_t.shape[0] - 1)]
+
+
+def segment_arrays(
+    segs_list: Sequence[Sequence[tuple[float, float]]],
+) -> tuple[np.ndarray, np.ndarray, int]:
+    """Pad per-scenario ``(t_start, bps)`` segment lists into [B, S] tensors.
+
+    The single definition of the on-device trace layout, shared with the
+    fleet engine (``sim_multi_batch``): segments sort like
+    ``Trace.piecewise``, S pads to the batch's power-of-two maximum, and
+    sentinel entries carry ``t_start = +inf`` (never selectable by
+    ``_trace_bw``'s right bisection) with the last real value repeated.
+    """
+    B = len(segs_list)
+    clean = [
+        sorted((float(t), float(v)) for t, v in segs) or [(0.0, 0.0)]
+        for segs in segs_list
+    ]
+    S = _quant_pow2(max(len(segs) for segs in clean))
+    bw_t = np.full((B, S), np.inf, np.float64)
+    bw_v = np.zeros((B, S), np.float64)
+    for i, segs in enumerate(clean):
+        bw_t[i, : len(segs)] = [t for t, _ in segs]
+        bw_v[i, : len(segs)] = [v for _, v in segs]
+        bw_v[i, len(segs):] = segs[-1][1]
+    return bw_t, bw_v, S
+
+
+def _net_arrays(group: list[BatchScenario]) -> tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Per-scenario network tensors: rtt [B] plus the padded segment
+    tensors of :func:`segment_arrays`."""
+    bw_t, bw_v, S = segment_arrays([s.bw_segments for s in group])
+    rtt = np.array([s.rtt for s in group], np.float64)
+    return rtt, bw_t, bw_v, S
+
+
+def _offload_tables(
+    models: list[ModelProfile], group: list[BatchScenario]
+) -> tuple[np.ndarray, np.ndarray]:
+    """Host-precomputed offload tables: frame payload bits [B, R] (the exact
+    ``frame_bytes(r) * 8.0`` the reference feeds ``upload_time``) and server
+    accuracy [B, J, R] at each scenario's offered resolutions."""
+    nbits8 = np.array(
+        [[s.stream.frame_bytes(r) * 8.0 for r in s.stream.resolutions] for s in group],
+        np.float64,
+    )
+    acc_sv = np.array(
+        [
+            [[m.accuracy(r, where="server") for r in s.stream.resolutions] for m in models]
+            for s in group
+        ],
+        np.float64,
+    )
+    return nbits8, acc_sv
+
+
+def _net_group_key(s: BatchScenario) -> tuple[int, int]:
+    return (_quant_w(_window_frames(s.stream, s.params)), len(s.stream.resolutions))
+
+
+@lru_cache(maxsize=None)
+def _max_accuracy_program(W: int, NBINS: int, S: int, J: int, R: int, strict: bool):
+    def one(gamma, deadline, rtt, grid, n_active, n_frames,
+            arr0, dl0, arr1, dl1, dur, arrivals, acc_stat,
+            nbits8, acc_sv, bw_t, bw_v, t_srv, acc_dp, t_npu64):
+        ks = jnp.arange(W, dtype=jnp.int32)
+
+        def cond(c):
+            return c[0] < n_frames
+
+        def body(c):
+            head, busy, acc_sum, proc, miss, offl, rounds, npu_s = c
+            active = head < n_frames
+            rounded = n_frames > 0  # traced, always true: _no_fma's gate
+            t0 = _no_fma(head.astype(jnp.float64) * gamma, rounded)
+            npu_free = jnp.maximum(0.0, busy - t0)
+            start_bin = jnp.ceil(jnp.maximum(npu_free, 0.0) / grid).astype(jnp.int32)
+            bw0 = _trace_bw(bw_t, bw_v, t0)  # the reference's trace.at(t0)
+            t_up = jnp.where(bw0 > 0.0, nbits8 / bw0, jnp.inf)  # [R]
+            budget = deadline - t_up - rtt  # [R]
+            fits = t_srv[:, None] <= budget[None, :]  # [J, R]
+            a_cand = jnp.where(fits, acc_sv, -jnp.inf)
+            j_best = jnp.argmax(a_cand, axis=0).astype(jnp.int32)  # first max
+            a_best = jnp.max(a_cand, axis=0)
+            r_ok = (budget > 0.0) & jnp.any(fits, axis=0)
+            n_l = jnp.floor(jnp.where(r_ok, t_up, 0.0) / gamma)
+            n_l = jnp.clip(n_l, 0, W).astype(jnp.int32)  # [R]
+            cho1, par1, mh1, ab1, alive1 = _accuracy_dp64(
+                dur, acc_dp, arr1, dl1, start_bin, n_frames=W, nbins=NBINS
+            )
+            nlm1 = jnp.clip(n_l - 1, 0, W - 1)
+            # The reference sizes each DP instance at ceil(horizon/grid)+2
+            # bins and declares start_bin >= nbins infeasible; rebuild that
+            # per-candidate bound from the shared prefix scan.
+            nb1 = jnp.ceil(
+                (gamma + _no_fma((n_l.astype(jnp.float64) - 1.0) * gamma, rounded)
+                 + deadline) / grid
+            ).astype(jnp.int32) + 2
+            dp_ok = jnp.where(n_l == 0, True, alive1[nlm1] & (start_bin < nb1))
+            dp_tot = jnp.where(n_l == 0, 0.0, mh1[nlm1])
+            feas = r_ok & dp_ok
+            norm = jnp.where(feas, (a_best + dp_tot) / (n_l + 1).astype(jnp.float64), NEG)
+            r_star = jnp.argmax(norm).astype(jnp.int32)  # first max = lowest r
+            off_exists = feas[r_star]
+            off_norm = norm[r_star]
+
+            cho0, par0, mh0, ab0, alive0 = _accuracy_dp64(
+                dur, acc_dp, arr0, dl0, start_bin, n_frames=W, nbins=NBINS
+            )
+            # local_window_plan tries nn = n..1 and keeps the first feasible;
+            # aliveness is prefix-monotone, so that is the leading-alive
+            # count (and the start_bin bound only loosens as nn grows).
+            A = jnp.sum((alive0 & (ks < n_active)).astype(jnp.int32), dtype=jnp.int32)
+            nb0 = jnp.ceil(
+                (_no_fma((A.astype(jnp.float64) - 1.0) * gamma, rounded) + deadline)
+                / grid
+            ).astype(jnp.int32) + 2
+            loc_exists = (A >= 1) & (start_bin < nb0)
+            loc_norm = jnp.where(
+                loc_exists, mh0[jnp.clip(A - 1, 0, W - 1)] / A.astype(jnp.float64), NEG
+            )
+            use_loc = loc_exists & (loc_norm > jnp.where(off_exists, off_norm, NEG))
+            use_off = off_exists & ~use_loc
+
+            nn = jnp.where(use_off, n_l[r_star], jnp.where(use_loc, A, 0))
+
+            # Backtrack both DPs on [W] vectors (a second cheap scan beats
+            # materializing a [W, NBINS] select of the winner's tables).
+            def backtrack(cho, par, b0, upto):
+                def bt(b, k):
+                    on = k < upto  # prefix records: frames past upto not ours
+                    bc = jnp.clip(b, 0, NBINS - 1)
+                    pick = jnp.where(on, cho[k, bc], -1)
+                    return jnp.where(on & (pick >= 0), par[k, bc], b), pick
+
+                _, picks_rev = jax.lax.scan(
+                    bt, b0, jnp.arange(W - 1, -1, -1, dtype=jnp.int32)
+                )
+                return picks_rev[::-1]
+
+            picks_off = backtrack(cho1, par1, ab1[nlm1[r_star]], jnp.where(use_off, nn, 0))
+            picks_loc = backtrack(cho0, par0, ab0[jnp.clip(A - 1, 0, W - 1)],
+                                  jnp.where(use_loc, nn, 0))
+            picks = jnp.where(use_off, picks_off, picks_loc)
+
+            # Head-frame offload first: decision order is SERVER, then NPUs.
+            srv_fin = (t_up[r_star] + rtt) + t_srv[j_best[r_star]]
+            if strict:
+                srv_bad = use_off & (srv_fin > deadline + AUDIT_TOL)
+            else:
+                srv_bad = jnp.bool_(False)
+            srv_take = active & use_off & ~srv_bad
+            acc_sum = acc_sum + jnp.where(srv_take, acc_sv[j_best[r_star], r_star], 0.0)
+            proc = proc + srv_take.astype(jnp.int32)
+            offl = offl + srv_take.astype(jnp.int32)
+            miss = miss + (active & srv_bad).astype(jnp.int32)
+
+            fa = jnp.where(use_off, gamma, 0.0)
+            gate = active & (picks >= 0) & (ks < nn)
+            free0 = jnp.maximum(npu_free, 0.0)
+            free_end, acc_sum, proc, miss, npu_s = _audit_scan(
+                head=head, frame_offset=jnp.where(use_off, 1, 0),
+                n_frames=n_frames, n_active=n_active, arrivals=fa + arrivals,
+                deadline=deadline, t_npu64=t_npu64, acc_stat=acc_stat,
+                picks=picks, gate=gate, free0=free0, acc_sum=acc_sum,
+                proc=proc, miss=miss, npu_s=npu_s, W=W, J=J, strict=strict,
+            )
+            busy_until = jnp.where(use_off | use_loc, free_end, npu_free)
+            horizon = jnp.where(
+                use_off, n_l[r_star] + 1, jnp.where(use_loc, A, 1)
+            ).astype(jnp.int32)
+            head = jnp.where(active, head + horizon, head)
+            busy = jnp.where(active, t0 + busy_until, busy)
+            rounds = rounds + active.astype(jnp.int32)
+            return head, busy, acc_sum, proc, miss, offl, rounds, npu_s
+
+        init = (
+            jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float64),
+            jnp.zeros((), jnp.float64), jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float64),
+        )
+        out = jax.lax.while_loop(cond, body, init)
+        return out[2], out[3], out[4], out[6], out[7], out[5]
+
+    return jax.jit(jax.vmap(one, in_axes=(0,) * 17 + (None,) * 3))
+
+
+@_planner("max_accuracy")
+def _run_max_accuracy(models, scenarios, strict):
+    t_srv = np.array([m.t_server for m in models], np.float64)
+    acc_dp = np.array(
+        [m.acc_npu[max(m.acc_npu)] if m.acc_npu else 0.0 for m in models], np.float64
+    )
+
+    def run_group(key, group):
+        W, R = key
+        c = _common(models, group, W)
+        grid = np.array([float(s.params["grid"]) for s in group], np.float64)
+        # Bin arithmetic in f64 on the host — the same numpy expressions as
+        # max_accuracy.local_dp, for both first_arrival values (0: the pure
+        # local window; gamma: the frames buffered behind an offload).
+        arr0 = np.ceil(c.arrivals / grid[:, None]).astype(np.int32)
+        dl0 = np.floor((c.arrivals + c.deadline[:, None]) / grid[:, None]).astype(np.int32)
+        arrivals1 = c.gamma[:, None] + c.arrivals
+        arr1 = np.ceil(arrivals1 / grid[:, None]).astype(np.int32)
+        dl1 = np.floor((arrivals1 + c.deadline[:, None]) / grid[:, None]).astype(np.int32)
+        horizon_t = c.gamma + (c.n_active.astype(np.float64) - 1.0) * c.gamma + c.deadline
+        NBINS = _quant_bins(int((np.ceil(horizon_t / grid) + 2).max()))
+        with np.errstate(invalid="ignore"):
+            dur_f = np.ceil(c.t_npu64[None, :] / grid[:, None])
+        dur = np.where(np.isfinite(dur_f), np.minimum(dur_f, NBINS), NBINS).astype(np.int32)
+        rtt, bw_t, bw_v, S = _net_arrays(group)
+        nbits8, acc_sv = _offload_tables(models, group)
+        t0 = time.perf_counter()
+        with enable_x64():
+            out = _max_accuracy_program(c.W, NBINS, S, c.J, R, strict)(
+                c.gamma, c.deadline, rtt, grid, c.n_active, c.n_frames,
+                arr0, dl0, arr1, dl1, dur, c.arrivals, c.acc_stat64,
+                nbits8, acc_sv, bw_t, bw_v, t_srv, acc_dp, c.t_npu64,
+            )
+            out = [np.asarray(a) for a in out]
+        return _collect(c, out[:5], time.perf_counter() - t0, offloaded=out[5])
+
+    return _stitch(scenarios, _net_group_key, run_group)
+
+
+@lru_cache(maxsize=None)
+def _max_utility_program(W: int, S: int, J: int, R: int, strict: bool, width: int):
+    def one(gamma, deadline, rtt, alpha, fps, n_w, n_frames, arrivals, acc_stat,
+            nbits8, acc_sv, bw_t, bw_v, t_srv, acc_dp, t_npu64):
+        ks = jnp.arange(W, dtype=jnp.int32)
+
+        def backtrack(u_final, parents, actions):
+            slot0 = jnp.argmax(u_final).astype(jnp.int32)  # first max = front order
+
+            def bt(s, k):
+                ok = s >= 0
+                sc = jnp.clip(s, 0, width - 1)
+                pick = jnp.where(ok, actions[k, sc], -1)
+                return jnp.where(ok, parents[k, sc], s), pick
+
+            _, picks_rev = jax.lax.scan(
+                bt, slot0, jnp.arange(W - 1, -1, -1, dtype=jnp.int32)
+            )
+            return picks_rev[::-1]
+
+        def cand_stats(picks, acc0):
+            # _round_utility's decision-order f64 fold; the head offload's
+            # server accuracy seeds acc0 so the summation order matches.
+            def f(carry, pick):
+                n, a = carry
+                takes = pick >= 0
+                j = jnp.clip(pick, 0, J - 1)
+                return (
+                    n + takes.astype(jnp.int32),
+                    a + jnp.where(takes, acc_stat[j], 0.0),
+                ), None
+
+            (n, a), _ = jax.lax.scan(f, (jnp.int32(0), acc0), picks)
+            return n, a
+
+        def cond(c):
+            return c[0] < n_frames
+
+        def body(c):
+            head, busy, acc_sum, proc, miss, offl, rounds, npu_s, ovf = c
+            active = head < n_frames
+            rounded = n_frames > 0  # traced, always true: _no_fma's gate
+            t0 = _no_fma(head.astype(jnp.float64) * gamma, rounded)
+            npu_free = jnp.maximum(0.0, busy - t0)
+            bw0 = _trace_bw(bw_t, bw_v, t0)
+            t_up = jnp.where(bw0 > 0.0, nbits8 / bw0, jnp.inf)  # [R]
+            # Offload phase: argmax_{j,r} capped-rate + alpha * a(j, r); the
+            # reference iterates r-outer/j-inner with strict >, so the first
+            # maximum over the r-major flattening wins ties identically.
+            feas = (t_up[:, None] + t_srv[None, :] + rtt) <= deadline  # [R, J]
+            rate = jnp.minimum(1.0 / jnp.maximum(t_up, 1e-9), fps)
+            score = rate[:, None] + _no_fma(
+                alpha * jnp.swapaxes(acc_sv, 0, 1), rounded
+            )  # [R, J]
+            flat = jnp.where(feas, score, -jnp.inf).reshape(-1)
+            off_exists = jnp.any(feas)
+            pick_rj = jnp.argmax(flat).astype(jnp.int32)
+            r0 = pick_rj // J
+            j0 = pick_rj - r0 * J
+            t_up0 = jnp.where(off_exists, t_up[r0], 0.0)
+            n_l = jnp.clip(jnp.floor(t_up0 / gamma), 0, W).astype(jnp.int32)
+            n_plan = jnp.maximum(n_l, n_w - 1)
+            win1 = jnp.maximum(jnp.maximum(n_plan, 1).astype(jnp.float64) * gamma, gamma)
+            (_, u1, _, _), par1, act1, ov1 = _utility_dp64(
+                t_npu64, acc_dp, n_plan, n_frames=W, width=width,
+                gamma=gamma, deadline=deadline, alpha=alpha, npu_free=npu_free,
+                first_arrival=gamma, window=win1,
+            )
+            win2 = jnp.maximum(n_w.astype(jnp.float64) * gamma, gamma)
+            (_, u2, _, _), par2, act2, ov2 = _utility_dp64(
+                t_npu64, acc_dp, n_w, n_frames=W, width=width,
+                gamma=gamma, deadline=deadline, alpha=alpha, npu_free=npu_free,
+                first_arrival=jnp.float64(0.0), window=win2,
+            )
+            ovf = ovf | (active & (ov1 | ov2))
+            picks1 = backtrack(u1, par1, act1)
+            picks2 = backtrack(u2, par2, act2)
+            srv_acc = acc_sv[j0, r0]
+            n1, a_off = cand_stats(picks1, srv_acc)  # server acc accumulates first
+            n2, a_loc = cand_stats(picks2, jnp.float64(0.0))
+            # The true round objective (_round_utility) for both candidates.
+            p_off = (n1 + 1).astype(jnp.float64)
+            h_off = jnp.maximum(n_plan + 1, 1).astype(jnp.float64)
+            u_off = jnp.where(
+                off_exists, p_off / (h_off * gamma) + alpha * a_off / p_off, NEG
+            )
+            u_loc = jnp.where(
+                n2 > 0,
+                n2.astype(jnp.float64) / (n_w.astype(jnp.float64) * gamma)
+                + alpha * a_loc / n2.astype(jnp.float64),
+                0.0,
+            )
+            use_off = off_exists & (u_off >= u_loc)  # first candidate wins ties
+            use_loc = ~use_off & (n2 > 0)
+
+            nn = jnp.where(use_off, n_plan, jnp.where(use_loc, n_w, 0))
+            picks = jnp.where(use_off, picks1, picks2)
+            srv_fin = (t_up0 + rtt) + t_srv[jnp.clip(j0, 0, J - 1)]
+            if strict:
+                srv_bad = use_off & (srv_fin > deadline + AUDIT_TOL)
+            else:
+                srv_bad = jnp.bool_(False)
+            srv_take = active & use_off & ~srv_bad
+            acc_sum = acc_sum + jnp.where(srv_take, srv_acc, 0.0)
+            proc = proc + srv_take.astype(jnp.int32)
+            offl = offl + srv_take.astype(jnp.int32)
+            miss = miss + (active & srv_bad).astype(jnp.int32)
+
+            fa = jnp.where(use_off, gamma, 0.0)
+            gate = active & (picks >= 0) & (ks < nn)
+            free0 = jnp.maximum(npu_free, 0.0)
+            free_end, acc_sum, proc, miss, npu_s = _audit_scan(
+                head=head, frame_offset=jnp.where(use_off, 1, 0),
+                n_frames=n_frames, n_active=n_w, arrivals=fa + arrivals,
+                deadline=deadline, t_npu64=t_npu64, acc_stat=acc_stat,
+                picks=picks, gate=gate, free0=free0, acc_sum=acc_sum,
+                proc=proc, miss=miss, npu_s=npu_s, W=W, J=J, strict=strict,
+            )
+            busy_until = jnp.where(use_off | use_loc, free_end, npu_free)
+            horizon = jnp.where(
+                use_off, n_plan + 1, jnp.where(use_loc, n_w, 1)
+            ).astype(jnp.int32)
+            head = jnp.where(active, head + horizon, head)
+            busy = jnp.where(active, t0 + busy_until, busy)
+            rounds = rounds + active.astype(jnp.int32)
+            return head, busy, acc_sum, proc, miss, offl, rounds, npu_s, ovf
+
+        init = (
+            jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float64),
+            jnp.zeros((), jnp.float64), jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float64),
+            jnp.zeros((), bool),
+        )
+        out = jax.lax.while_loop(cond, body, init)
+        return out[2], out[3], out[4], out[6], out[7], out[5], out[8]
+
+    return jax.jit(jax.vmap(one, in_axes=(0,) * 13 + (None,) * 3))
+
+
+@_planner("max_utility")
+def _run_max_utility(models, scenarios, strict):
+    t_srv = np.array([m.t_server for m in models], np.float64)
+    acc_dp = np.array(
+        [m.acc_npu[max(m.acc_npu)] if m.acc_npu else 0.0 for m in models], np.float64
+    )
+
+    def run_group(key, group):
+        W, R = key
+        c = _common(models, group, W)
+        alpha = np.array([float(s.params["alpha"]) for s in group], np.float64)
+        fps = np.array([s.stream.fps for s in group], np.float64)
+        rtt, bw_t, bw_v, S = _net_arrays(group)
+        nbits8, acc_sv = _offload_tables(models, group)
+        lane_args = (c.gamma, c.deadline, rtt, alpha, fps, c.n_active, c.n_frames,
+                     c.arrivals, c.acc_stat64, nbits8, acc_sv, bw_t, bw_v)
+        t0 = time.perf_counter()
+        with enable_x64():
+            out = _max_utility_program(c.W, S, c.J, R, strict, _UTIL_FAST_WIDTH)(
+                *lane_args, t_srv, acc_dp, c.t_npu64,
+            )
+            out = [np.array(a) for a in out]
+            overflowed = np.nonzero(out[6])[0]
+            if overflowed.size:
+                # A front outgrew the fast width somewhere in these lanes:
+                # rerun just them at the reference prune cap (exact for any
+                # front size) and splice the results back in.
+                sub = _max_utility_program(c.W, S, c.J, R, strict, _UTIL_CAP)(
+                    *(a[overflowed] for a in lane_args), t_srv, acc_dp, c.t_npu64,
+                )
+                for dst, src in zip(out[:6], sub[:6]):
+                    dst[overflowed] = np.asarray(src)
+        return _collect(c, out[:5], time.perf_counter() - t0, offloaded=out[5])
+
+    return _stitch(scenarios, _net_group_key, run_group)

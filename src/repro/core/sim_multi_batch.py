@@ -70,6 +70,7 @@ from jax.experimental import enable_x64
 
 from .profiles import ModelProfile, StreamSpec
 from .schedule import StreamStats
+from .sim_batch import _trace_bw, segment_arrays
 from .simulator import _BITS_EPS, _EPS, MultiStreamStats
 
 __all__ = [
@@ -102,8 +103,14 @@ _BIG_I32 = np.iinfo(np.int32).max
 class FleetScenario:
     """One fleet grid point as the batched backend sees it: a homogeneous
     fleet (the ``make_fleet`` shape — one stream spec, per-client weights /
-    priorities), a constant network, an allocation policy, and the inner
-    policy's *resolved* parameter dict."""
+    priorities), a shared network, an allocation policy, and the inner
+    policy's *resolved* parameter dict.
+
+    The network is ``bw_segments`` — sorted piecewise-constant
+    ``(t_start_s, bandwidth_bps)`` segments replayed on device (allocation
+    reads bandwidth at each round's start, the fluid link at every event
+    boundary, exactly like the reference's ``trace.at``) — or, when that is
+    ``None``, the constant ``bandwidth_bps``."""
 
     stream: StreamSpec = field(default_factory=StreamSpec)
     n_frames: int = 120
@@ -116,6 +123,7 @@ class FleetScenario:
     weights: tuple[float, ...] | None = None
     priorities: tuple[int, ...] | None = None
     params: Mapping[str, Any] = field(default_factory=dict)
+    bw_segments: tuple[tuple[float, float], ...] | None = None
 
 
 _PLANNERS: dict[str, Callable[..., list[tuple[MultiStreamStats, dict]]]] = {}
@@ -222,17 +230,24 @@ def _seq_sum(values):
 
 
 @lru_cache(maxsize=None)
-def _fleet_program(alloc: str, N: int, K: int, F: int, J: int, R: int):
+def _fleet_program(alloc: str, N: int, K: int, F: int, J: int, R: int, S: int):
     """Compile one (allocation policy, fleet size, capacity, frame count)
-    shape group.  J/R are the model/resolution table sizes."""
+    shape group.  J/R are the model/resolution table sizes; S is the padded
+    bandwidth-segment count (sentinel segments at t_start=+inf are inert —
+    see ``sim_batch._trace_bw``)."""
     fifo = alloc == "fifo"
     prio_pol = alloc == "priority"
     KW = max(K, 1)  # worker count (the reference's max(int(capacity), 1))
     MAXEV = N * F + N + 4  # completion events are bounded by registrations
 
-    def one(B, gamma, T, rtt, fps, L, alpha, is_util, w_fluid, w_eff, tot_w,
-            prio, order, bits_r, acc_sv, t_srv):
+    def one(bw_t, bw_v, gamma, T, rtt, fps, L, alpha, is_util, w_fluid, w_eff,
+            tot_w, prio, order, bits_r, acc_sv, t_srv):
         cids = jnp.arange(N, dtype=jnp.int32)
+
+        def bw_at(t):
+            # The reference's trace.at(t).bandwidth_bps: piecewise-constant
+            # step lookup (constant traces are a single t=0 segment).
+            return _trace_bw(bw_t, bw_v, t)
 
         # -- fluid link: rates over the per-client head uploads ------------
         def heads(st):
@@ -243,7 +258,7 @@ def _fleet_program(alloc: str, N: int, K: int, F: int, J: int, R: int):
             hseq = jnp.where(active, st.q_seq[cids, idx], _BIG_I32)
             return active, hbits, hcap, hseq
 
-        def waterfill(active, caps):
+        def waterfill(B, active, caps):
             # Fixed-point rendering of edge_server.fluid_rates: each round
             # either freezes >= 1 capped transfer or assigns final shares,
             # so N (static, tiny) rounds always suffice — unrolled.
@@ -273,7 +288,10 @@ def _fleet_program(alloc: str, N: int, K: int, F: int, J: int, R: int):
 
         def link_state(st):
             active, hbits, hcap, hseq = heads(st)
-            rates = waterfill(active, hcap)
+            # Rates re-evaluate at every event boundary against the trace's
+            # bandwidth at the CURRENT time — the reference's
+            # _fluid_rates(trace.at(now).bandwidth_bps, active).
+            rates = waterfill(bw_at(st.now), active, hcap)
             finish = jnp.where(
                 active & (rates > _EPS), st.now + hbits / rates, _BIG
             )
@@ -403,9 +421,10 @@ def _fleet_program(alloc: str, N: int, K: int, F: int, J: int, R: int):
             c = order[rank]
             lease_len = st.tail - released  # [N]
             total = jnp.sum(lease_len)
+            B0 = bw_at(t0)  # the reference plans against trace.at(t0)
 
             if fifo:
-                grant = B
+                grant = B0
                 denied = jnp.bool_(False)
             else:
                 own = lease_len[c]
@@ -421,8 +440,8 @@ def _fleet_program(alloc: str, N: int, K: int, F: int, J: int, R: int):
                     reserved = jnp.bool_(False)
                 gated = (effective >= K) | backlogged | reserved
                 used = _seq_sum(jnp.where(cids != c, act_bps, 0.0))
-                available = jnp.maximum(B - used, 0.0)
-                share = B * w_eff[c] / tot_w
+                available = jnp.maximum(B0 - used, 0.0)
+                share = B0 * w_eff[c] / tot_w
                 grant = jnp.minimum(share, available)
                 denied = gated | (grant <= 0.0)
                 grant = jnp.where(denied, 0.0, grant)
@@ -526,7 +545,7 @@ def _fleet_program(alloc: str, N: int, K: int, F: int, J: int, R: int):
         return st.accs, st.proc, st.miss, st.grants, st.denials, st.sjobs, st.sbusy
 
     return jax.jit(
-        jax.vmap(one, in_axes=(0,) * 13 + (None,) * 3)
+        jax.vmap(one, in_axes=(0,) * 14 + (None,) * 3)
     )
 
 
@@ -566,7 +585,12 @@ def _run_offload(models, scenarios):
             [[m.accuracy(r, where="server") for r in resolutions] for m in models],
             np.float64,
         )
-        bw = np.array([s.bandwidth_bps for s in group], np.float64)
+        # Bandwidth trace segments in the shared on-device layout (sorting,
+        # power-of-two padding, inert t_start=+inf sentinels — one
+        # definition in sim_batch, read back by _trace_bw).
+        bw_t, bw_v, S = segment_arrays(
+            [s.bw_segments or ((0.0, s.bandwidth_bps),) for s in group]
+        )
         gamma = np.array([s.stream.gamma for s in group], np.float64)
         T = np.array([s.stream.deadline for s in group], np.float64)
         rtt = np.array([s.rtt for s in group], np.float64)
@@ -602,12 +626,12 @@ def _run_offload(models, scenarios):
             [np.lexsort((np.arange(N), -wr, -pr)) for wr, pr in zip(w, prio)]
         ).astype(np.int32)
 
-        program = _fleet_program(alloc, N, K, F, len(models), R)
+        program = _fleet_program(alloc, N, K, F, len(models), R, S)
         t0 = time.perf_counter()
         with enable_x64():
             out = program(
-                bw, gamma, T, rtt, fps, L, alpha, is_util, w_fluid, w_eff,
-                tot_w, prio, order, bits_r, acc_sv, t_srv,
+                bw_t, bw_v, gamma, T, rtt, fps, L, alpha, is_util, w_fluid,
+                w_eff, tot_w, prio, order, bits_r, acc_sv, t_srv,
             )
             accs, proc, miss, grants, denials, sjobs, sbusy = (
                 np.asarray(a) for a in out

@@ -101,6 +101,19 @@ class TraceSpec:
             return Trace.piecewise(list(self.points), rtt_ms=self.rtt_ms)
         return Trace.constant(self.mbps, rtt_ms=self.rtt_ms)
 
+    def segments(self) -> tuple[tuple[float, float], ...]:
+        """Lower to sorted ``(t_start_s, bandwidth_bps)`` segments — the
+        batched engines' on-device trace representation (a constant trace
+        is one segment at t=0).  Mirrors ``Trace.piecewise``'s sort and
+        its bps conversion exactly."""
+        if self.kind == "piecewise":
+            return tuple((float(t), float(v) * 1e6) for t, v in sorted(self.points))
+        return ((0.0, float(self.mbps) * 1e6),)
+
+    @property
+    def rtt_s(self) -> float:
+        return self.rtt_ms / 1e3
+
     def to_json(self) -> dict[str, Any]:
         out: dict[str, Any] = {"kind": self.kind, "rtt_ms": self.rtt_ms}
         if self.kind == "constant":
@@ -737,12 +750,14 @@ class Session:
         """Run the base scenario across every point of ``grid``.
 
         Backend routing: policies registered ``batched=True`` execute the
-        whole grid as one jit+vmap program (``core/sim_batch``), audited
-        bit-identically to the reference loop; fleet grids of
+        whole grid as one jit+vmap program (``core/sim_batch``) — the
+        network-aware planners (``max_accuracy``/``max_utility``) replay
+        constant and piecewise traces on device; fleet grids of
         ``batched_multi=True`` policies execute through the vectorized
         multi-stream engine (``core/sim_multi_batch`` — shared fluid
-        uplink, scheduler admission, server queue on device, equivalence
-        certified to ``sim_multi_batch.MULTI_TOL``).  Anything else runs
+        uplink with piecewise-constant trace replay, scheduler admission,
+        server queue on device, equivalence certified to
+        ``sim_multi_batch.MULTI_TOL``).  Anything else runs
         the per-point reference engines (``run_sim``, or ``run_multi``
         when the point has a fleet).  Requesting ``backend="batched"`` for
         a policy/grid combination without a vectorized engine logs a
@@ -754,6 +769,19 @@ class Session:
         entry = get_policy(self.spec.policy.name)
         pts = grid.points()
         specs = [_apply_point(self.spec, p) for p in pts]
+        # A bandwidth_mbps axis *replaces* the base trace; on a piecewise
+        # base that silently discards the time-varying profile — surface it
+        # (logged once, recorded per point below) instead of staying mute.
+        clobbered = [
+            "bandwidth_mbps" in p and self.spec.trace.kind == "piecewise" for p in pts
+        ]
+        if any(clobbered):
+            _LOG.warning(
+                "sweep axis 'bandwidth_mbps' replaces the piecewise base trace "
+                "with a constant trace at %d grid point(s); drop the axis (or "
+                "use a constant base trace) if the time-varying profile matters",
+                sum(clobbered),
+            )
         meta: dict[str, Any] = {"requested_backend": backend, "grid_points": len(pts)}
         capable, why = self._batched_capability(entry, specs)
         use_batched = capable if backend == "auto" else backend == "batched"
@@ -777,6 +805,12 @@ class Session:
                 points = self._sweep_batched_multi(specs, pts)
         else:
             points = [self._sweep_reference(s, p) for s, p in zip(specs, pts)]
+        for hit, point in zip(clobbered, points):
+            if hit:
+                point.meta["trace_override"] = (
+                    "bandwidth_mbps axis replaced the piecewise base trace "
+                    "with a constant trace"
+                )
         meta["wall_s"] = time.perf_counter() - t0
         return SweepReport(
             base=self.spec,
@@ -789,31 +823,31 @@ class Session:
     def _batched_capability(self, entry, specs: Sequence[ScenarioSpec]) -> tuple[bool, str]:
         """Can this (policy, grid) combination run on a vectorized engine?
 
-        Single-stream grids need ``batched=True`` (``sim_batch``).  Fleet
-        grids accept either ``batched=True`` (local-only plans: per-client
-        replication) or ``batched_multi=True`` with a dedicated fleet
-        planner (``sim_multi_batch``) — the latter additionally requires a
-        fleet and a constant trace at every point, because the tensor
-        program models one constant-bandwidth shared link.
+        Single-stream grids need ``batched=True`` (``sim_batch``); both
+        engines replay constant *and* piecewise traces on device, so the
+        trace kind never gates routing.  Fleet grids accept either
+        ``batched=True`` AND ``batched_multi=True`` (local-only plans:
+        per-client replication — a policy that offloads, like the batched
+        ``max_accuracy``/``max_utility``, contends for the shared link and
+        must NOT be replicated) or ``batched_multi=True`` with a dedicated
+        fleet planner (``sim_multi_batch``), which additionally requires a
+        fleet at every point.
         """
         fleet_pts = sum(1 for s in specs if s.fleet is not None)
         if fleet_pts == 0:
             if entry.batched:
                 return True, ""
             return False, f"policy {entry.name!r} has no batched backend"
-        if entry.batched:  # local-only plans never contend: replication
+        if entry.batched and entry.batched_multi:
+            # Declared local-only: clients never touch the link, so a fleet
+            # is N independent replicas of the single-stream program.
             return True, ""
         if not entry.batched_multi:
-            return False, f"policy {entry.name!r} has no batched backend"
+            return False, f"policy {entry.name!r} has no batched fleet backend"
         if fleet_pts < len(specs):
             return False, (
                 f"fleet backend for {entry.name!r} needs a fleet at every "
                 "grid point (grid mixes fleet and single-stream points)"
-            )
-        if any(s.trace.kind != "constant" for s in specs):
-            return False, (
-                f"fleet backend for {entry.name!r} needs a constant trace "
-                "at every grid point"
             )
         return True, ""
 
@@ -827,7 +861,11 @@ class Session:
         base = self.spec
         scens = [
             sim_batch.BatchScenario(
-                stream=s.stream, n_frames=s.n_frames, params=s.policy.resolved
+                stream=s.stream,
+                n_frames=s.n_frames,
+                params=s.policy.resolved,
+                rtt=s.trace.rtt_s,
+                bw_segments=s.trace.segments(),
             )
             for s in specs
         ]
@@ -836,9 +874,10 @@ class Session:
         )
         points = []
         for spec, pt, st in zip(specs, pts, stats):
-            # Batched policies plan locally and never contend for the link or
-            # server, so a fleet of identical clients is N independent copies
-            # of the single-stream result (golden-tested vs run_multi).
+            # Only local-only policies reach here with a fleet (capability
+            # gating): their clients never contend for the link or server,
+            # so a fleet of identical clients is N independent copies of
+            # the single-stream result (golden-tested vs run_multi).
             n = spec.fleet.n_clients if spec.fleet is not None else 1
             meta = {"policy": spec.policy.name}
             if n > 1:
@@ -863,8 +902,8 @@ class Session:
             sim_multi_batch.FleetScenario(
                 stream=s.stream,
                 n_frames=s.n_frames,
-                bandwidth_bps=s.trace.mbps * 1e6,
-                rtt=s.trace.rtt_ms / 1e3,
+                bw_segments=s.trace.segments(),
+                rtt=s.trace.rtt_s,
                 n_clients=s.fleet.n_clients,
                 allocation=s.fleet.allocation,
                 capacity=s.fleet.capacity,

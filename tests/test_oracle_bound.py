@@ -1,0 +1,64 @@
+"""Differential oracle bound for the network-aware batched planners.
+
+``brute_force.exhaustive_best`` enumerates every (skip | NPU model | offload
+model@resolution) assignment per frame in exact continuous time — the true
+optimum for tiny instances.  The paper's heuristics execute *some* feasible
+schedule in that action space, so their audited stats can never beat it:
+
+  * batched ``max_accuracy``'s mean accuracy <= oracle accuracy;
+  * batched ``max_utility``'s utility(alpha)  <= oracle utility.
+
+A cheap sanity bound the golden equivalence tests cannot provide: it checks
+the batched engine against the *problem*, not just against the reference
+implementation (both could share a bug; the oracle cannot).
+"""
+from __future__ import annotations
+
+from repro.core import PolicySpec
+from repro.core.brute_force import exhaustive_best
+from repro.core.profiles import PAPER_MODELS, StreamSpec, network_mbps
+from repro.session import ScenarioSpec, Session, SweepGrid, TraceSpec
+
+# Small discretized instance: 2 offload resolutions keep the exhaustive
+# search at (2 NPU + 4 offload + skip)^5 states.
+STREAM = StreamSpec(fps=10.0, deadline=0.2, resolutions=(90, 224))
+N_FRAMES = 5
+BANDWIDTHS = (0.5, 2.5, 8.0)
+RTT_MS = 50.0
+# The audit allows AUDIT_TOL (1e-9 s) of deadline slack the continuous-time
+# oracle does not; a comfortably larger epsilon absorbs it.
+TOL = 1e-6
+
+
+def _batched_points(policy: str, params: dict):
+    spec = ScenarioSpec(
+        policy=PolicySpec(policy, params),
+        n_frames=N_FRAMES,
+        stream=STREAM,
+        trace=TraceSpec(mbps=BANDWIDTHS[0], rtt_ms=RTT_MS),
+    )
+    rep = Session(spec).run_sweep(SweepGrid(bandwidth_mbps=BANDWIDTHS), backend="batched")
+    assert rep.backend == "batched"
+    return rep.points
+
+
+def test_batched_max_accuracy_never_beats_oracle():
+    pts = _batched_points("max_accuracy", {})
+    for pt in pts:
+        net = network_mbps(pt.overrides["bandwidth_mbps"], rtt_ms=RTT_MS)
+        opt = exhaustive_best(list(PAPER_MODELS), STREAM, net, N_FRAMES)
+        assert pt.stats.mean_accuracy <= opt + TOL, (pt.overrides, pt.stats, opt)
+    # and the bound is not vacuous: the heuristic does real work somewhere
+    assert any(p.stats.frames_processed > 0 for p in pts)
+
+
+def test_batched_max_utility_never_beats_oracle():
+    alpha = 100.0
+    pts = _batched_points("max_utility", {"alpha": alpha})
+    for pt in pts:
+        net = network_mbps(pt.overrides["bandwidth_mbps"], rtt_ms=RTT_MS)
+        opt = exhaustive_best(list(PAPER_MODELS), STREAM, net, N_FRAMES, alpha=alpha)
+        assert pt.stats.utility(alpha) <= opt + alpha * TOL, (
+            pt.overrides, pt.stats, opt,
+        )
+    assert any(p.stats.frames_processed > 0 for p in pts)

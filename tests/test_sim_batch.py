@@ -2,12 +2,17 @@
 
 The contract under test (docs/simulation.md): for every registered
 ``batched=True`` policy, ``Session.run_sweep(grid, backend="batched")``
-reproduces the reference simulator's audited per-scenario stats **exactly**
-— bit-identical accuracy sums, not approx — across a >= 100-point grid that
-exercises window padding (mixed fps), bin padding (mixed deadlines/grids),
-the infeasible horizon-1 path (deadline below every NPU latency), and
-policy-param axes.  Plus: registry flag <-> planner table sync, fleet-axis
-replication vs the real ``run_multi``, fallback routing, and the sweep CLI.
+reproduces the reference simulator's audited per-scenario stats across a
+>= 100-point grid that exercises window padding (mixed fps), bin padding
+(mixed deadlines/grids), the infeasible horizon-1 path (deadline below
+every NPU latency), and policy-param axes.  The jax_* planners are
+**bit-identical** (same f32 kernels); the network-aware ``max_accuracy`` /
+``max_utility`` planners replay float64 Python references, so their
+certified contract is integer stats exact + accuracy sums within
+``AUDIT_TOL`` — on constant AND piecewise traces.  Plus: registry flag <->
+planner table sync, fleet-axis replication vs the real ``run_multi``,
+fallback routing (incl. fleet grids of offload-capable batched policies),
+the piecewise-base trace-override warning, and the sweep CLI.
 """
 from __future__ import annotations
 
@@ -17,6 +22,7 @@ import logging
 import pytest
 
 from repro.core import PolicySpec
+from repro.core.audit import AUDIT_TOL
 from repro.core.registry import available_policies, get_policy
 from repro.core.sim_batch import batched_policies, simulate_batch
 from repro.session import (
@@ -25,6 +31,7 @@ from repro.session import (
     Session,
     SweepGrid,
     SweepReport,
+    TraceSpec,
 )
 
 # Every batched policy with (base params, the param axis swept in the golden
@@ -33,18 +40,29 @@ from repro.session import (
 BATCHED_PARAMS: dict[str, tuple[dict, dict]] = {
     "jax_accuracy": ({}, {"grid": (1e-3, 2e-3)}),
     "jax_utility": ({"alpha": 200.0}, {"alpha": (50.0, 200.0)}),
+    "max_accuracy": ({}, {"grid": (1e-3, 2e-3)}),
+    "max_utility": ({"alpha": 200.0}, {"alpha": (50.0, 200.0)}),
 }
 
-STATS_FIELDS = (
-    "accuracy_sum",
+# The network-aware planners replay float64 Python DPs: integer stats must
+# match exactly, accuracy sums within AUDIT_TOL (the jax_* planners stay
+# bit-identical — tolerance 0).
+NET_POLICIES = frozenset({"max_accuracy", "max_utility"})
+
+INT_FIELDS = (
     "frames_processed",
     "frames_missed_deadline",
     "frames_offloaded",
     "frames_total",
     "schedule_calls",
 )
+STATS_FIELDS = ("accuracy_sum",) + INT_FIELDS
 
 GOLD_FRAMES = 24
+
+PIECEWISE = TraceSpec(
+    kind="piecewise", points=((0.0, 3.0), (0.3, 0.8), (0.9, 6.0)), rtt_ms=60.0
+)
 
 
 def _golden_grid(param_axis: dict) -> SweepGrid:
@@ -58,14 +76,19 @@ def _golden_grid(param_axis: dict) -> SweepGrid:
     )
 
 
-def _assert_points_equal(ref, bat):
+def _assert_points_equal(ref, bat, acc_tol: float = 0.0):
     assert len(ref.points) == len(bat.points)
     for pr, pb in zip(ref.points, bat.points):
         assert pr.overrides == pb.overrides
         assert len(pr.streams) == len(pb.streams)
         for sr, sb in zip(pr.streams, pb.streams):
-            for f in STATS_FIELDS:
+            for f in INT_FIELDS:
                 assert getattr(sr, f) == getattr(sb, f), (pr.overrides, f)
+            assert abs(sr.accuracy_sum - sb.accuracy_sum) <= acc_tol, pr.overrides
+
+
+def _acc_tol(name: str) -> float:
+    return AUDIT_TOL if name in NET_POLICIES else 0.0
 
 
 def test_registry_flag_matches_backend_table():
@@ -85,7 +108,48 @@ def test_batched_backend_matches_reference_exactly(name):
     bat = Session(spec).run_sweep(grid, backend="batched")
     assert ref.backend == "reference" and bat.backend == "batched"
     assert len(bat.points) == len(grid)
-    _assert_points_equal(ref, bat)
+    _assert_points_equal(ref, bat, acc_tol=_acc_tol(name))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", sorted(NET_POLICIES))
+def test_network_planners_match_reference_on_piecewise_traces(name):
+    """The paper's planners under a time-varying trace: bandwidth steps
+    across segment boundaries mid-stream, an rtt axis varies the offload
+    budget, and a 10 ms deadline forces the skip path — the batched
+    stats must still match the reference loop point for point."""
+    base_params, _ = BATCHED_PARAMS[name]
+    grid = SweepGrid(
+        deadline_ms=(10.0, 150.0, 200.0, 350.0),
+        fps=(10.0, 30.0, 60.0),
+        rtt_ms=(40.0, 100.0),
+    )
+    spec = ScenarioSpec(
+        policy=PolicySpec(name, base_params), n_frames=36, trace=PIECEWISE
+    )
+    ref = Session(spec).run_sweep(grid, backend="reference")
+    bat = Session(spec).run_sweep(grid, backend="batched")
+    assert bat.backend == "batched"
+    _assert_points_equal(ref, bat, acc_tol=AUDIT_TOL)
+
+
+@pytest.mark.parametrize("name", sorted(NET_POLICIES))
+def test_network_planners_small_constant_and_piecewise(name):
+    """Fast-lane cousin of the slow goldens: a handful of points on both
+    trace kinds, asserting the same equivalence contract."""
+    base_params, _ = BATCHED_PARAMS[name]
+    for trace in (TraceSpec(mbps=2.5), PIECEWISE):
+        spec = ScenarioSpec(
+            policy=PolicySpec(name, base_params), n_frames=16, trace=trace
+        )
+        grid = SweepGrid(deadline_ms=(150.0, 250.0), fps=(30.0,))
+        ref = Session(spec).run_sweep(grid, backend="reference")
+        bat = Session(spec).run_sweep(grid, backend="batched")
+        assert bat.backend == "batched"
+        _assert_points_equal(ref, bat, acc_tol=AUDIT_TOL)
+        # the planners really do offload under a healthy network
+        if trace.kind == "constant":
+            assert any(p.stats.frames_offloaded > 0 for p in bat.points)
 
 
 def test_infeasible_deadline_is_skip_not_miss():
@@ -136,7 +200,7 @@ def test_large_width_still_supported():
 
 
 def test_python_policy_falls_back_with_warning(caplog):
-    spec = ScenarioSpec(policy=PolicySpec("max_accuracy"), n_frames=6)
+    spec = ScenarioSpec(policy=PolicySpec("local"), n_frames=6)
     with caplog.at_level(logging.WARNING, logger="repro.session"):
         rep = Session(spec).run_sweep(SweepGrid(bandwidth_mbps=(2.5,)), backend="batched")
     assert rep.backend == "reference"
@@ -151,7 +215,128 @@ def test_python_policy_falls_back_with_warning(caplog):
 
 def test_simulate_batch_rejects_unbatched_policy():
     with pytest.raises(ValueError, match="no batched backend"):
-        simulate_batch("max_accuracy", [], [])
+        simulate_batch("local", [], [])
+
+
+@pytest.mark.parametrize("name", sorted(NET_POLICIES))
+def test_offloading_policy_fleet_grid_falls_back_reference_identical(name, caplog):
+    """max_accuracy/max_utility are batched but OFFLOAD: a fleet of them
+    contends for the shared link, so fleet grids must not be served by
+    per-client replication — they log the documented fallback, stamp
+    ``meta["fallback"]``, and return reference-identical results."""
+    base_params, _ = BATCHED_PARAMS[name]
+    spec = ScenarioSpec(
+        policy=PolicySpec(name, base_params), n_frames=8,
+        fleet=FleetSpec(n_clients=2, capacity=2),
+    )
+    grid = SweepGrid(n_clients=(1, 2))
+    with caplog.at_level(logging.WARNING, logger="repro.session"):
+        rep = Session(spec).run_sweep(grid, backend="batched")
+    assert rep.backend == "reference"
+    assert "no batched fleet backend" in rep.meta["fallback"]
+    assert any("falling back" in r.getMessage() for r in caplog.records)
+    ref = Session(spec).run_sweep(grid, backend="reference")
+    _assert_points_equal(ref, rep)  # identical engine => bit-identical stats
+    assert [len(p.streams) for p in rep.points] == [1, 2]
+
+
+def test_utility_fast_width_overflow_rerun_is_exact(monkeypatch):
+    """The Max-Utility planner first runs a narrow Pareto width and reruns
+    lanes whose fronts outgrow it at the reference cap.  Force the narrow
+    pass to overflow on every round (width 2) and check the spliced results
+    still match the reference loop — the fast path must never trade
+    exactness."""
+    import repro.core.sim_batch as sb
+
+    monkeypatch.setattr(sb, "_UTIL_FAST_WIDTH", 2)
+    spec = ScenarioSpec(
+        policy=PolicySpec("max_utility", {"alpha": 200.0}), n_frames=12
+    )
+    grid = SweepGrid(deadline_ms=(200.0, 350.0), fps=(30.0,))
+    ref = Session(spec).run_sweep(grid, backend="reference")
+    bat = Session(spec).run_sweep(grid, backend="batched")
+    assert bat.backend == "batched"
+    _assert_points_equal(ref, bat, acc_tol=AUDIT_TOL)
+    assert any(p.stats.frames_processed > 0 for p in bat.points)
+
+
+def test_utility_prune_epsilon_window_matches_reference():
+    """The reference's dominance bar is the last KEPT utility; candidates
+    rejected inside the 1e-12 epsilon must not raise it.  NPU accuracies
+    separated at the 13th decimal make candidate utilities collide within
+    the epsilon — a cummax-based prune drops front entries the reference
+    keeps (regression for the keep-fold in _utility_dp64)."""
+    from repro.core import StreamSpec, Trace, profile_ms, simulate
+    from repro.core.sim_batch import BatchScenario, simulate_batch
+
+    models = [
+        profile_ms(n, t_npu_ms=20.0, t_server_ms=9.0,
+                   acc_server={45: 0.2, 224: 0.6}, acc_npu={224: a})
+        for n, a in (("a", 0.5), ("b", 0.5 + 4e-13), ("c", 0.5 + 1.1e-12))
+    ]
+    spec = PolicySpec("max_utility", {"alpha": 200.0})
+    for fps, dl, n in ((30.0, 0.2, 18), (50.0, 0.35, 24), (10.0, 0.1, 12)):
+        stream = StreamSpec(fps=fps, deadline=dl)
+        got, = simulate_batch(
+            "max_utility", models,
+            [BatchScenario(stream=stream, n_frames=n, params=spec.resolved)],
+        )
+        ref = simulate(spec.build(), models, stream, Trace.constant(2.5), n)
+        for f in INT_FIELDS:
+            assert getattr(got, f) == getattr(ref, f), (fps, dl, n, f)
+        assert abs(got.accuracy_sum - ref.accuracy_sum) <= AUDIT_TOL
+
+
+def test_utility_dp64_overflow_flag():
+    """White-box: a width too small for the front sets the overflow flag;
+    the reference cap width does not (for this instance)."""
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.core.jax_sched import _utility_dp64
+    from repro.core.profiles import PAPER_MODELS
+
+    with enable_x64():
+        t_npu = jnp.array([m.t_npu for m in PAPER_MODELS], jnp.float64)
+        acc = jnp.array(
+            [m.acc_npu[max(m.acc_npu)] for m in PAPER_MODELS], jnp.float64
+        )
+        kw = dict(
+            n_frames=8, gamma=jnp.float64(1 / 30.0), deadline=jnp.float64(0.35),
+            alpha=jnp.float64(200.0), npu_free=jnp.float64(0.0),
+            first_arrival=jnp.float64(0.0), window=jnp.float64(8 / 30.0),
+        )
+        *_, ov_small = _utility_dp64(t_npu, acc, 8, width=2, **kw)
+        *_, ov_large = _utility_dp64(t_npu, acc, 8, width=256, **kw)
+    assert bool(ov_small) and not bool(ov_large)
+
+
+def test_bandwidth_axis_overriding_piecewise_trace_warns_and_records(caplog):
+    """A bandwidth_mbps axis replaces the base trace; on a piecewise base
+    that silently drops the time-varying profile — run_sweep must log a
+    warning and record the override in the affected points' meta."""
+    spec = ScenarioSpec(policy=PolicySpec("jax_accuracy"), n_frames=6, trace=PIECEWISE)
+    grid = SweepGrid(bandwidth_mbps=(1.0, 2.5), deadline_ms=(200.0,))
+    with caplog.at_level(logging.WARNING, logger="repro.session"):
+        rep = Session(spec).run_sweep(grid)
+    assert any(
+        "piecewise base trace" in r.getMessage() for r in caplog.records
+    ), "silent trace override must warn"
+    assert all("trace_override" in p.meta for p in rep.points)
+    assert "bandwidth_mbps" in rep.points[0].meta["trace_override"]
+    # constant base trace: the axis is the normal parameterization — silent
+    caplog.clear()
+    spec_c = ScenarioSpec(policy=PolicySpec("jax_accuracy"), n_frames=6)
+    with caplog.at_level(logging.WARNING, logger="repro.session"):
+        rep_c = Session(spec_c).run_sweep(grid)
+    assert not caplog.records
+    assert all("trace_override" not in p.meta for p in rep_c.points)
+    # an rtt_ms-only axis preserves the piecewise profile: no override
+    caplog.clear()
+    with caplog.at_level(logging.WARNING, logger="repro.session"):
+        rep_r = Session(spec).run_sweep(SweepGrid(rtt_ms=(50.0, 100.0)))
+    assert not caplog.records
+    assert all("trace_override" not in p.meta for p in rep_r.points)
 
 
 def test_sweep_grid_validation_and_points():

@@ -100,6 +100,83 @@ def test_batched_stats_equal_reference_simulate(case):
             assert getattr(got, f) == getattr(ref, f), (spec, stream, n, f)
 
 
+# ---------------------------------------------------------------------------
+# Network-aware planners (max_accuracy / max_utility): random traces too.
+# Stream/trace shape values come from small sets (shared jit cache); model
+# latencies, bandwidths, rtt, and alpha stay continuous — they are traced.
+# ---------------------------------------------------------------------------
+
+from repro.core.audit import AUDIT_TOL  # noqa: E402
+
+INT_FIELDS = tuple(f for f in STATS_FIELDS if f != "accuracy_sum")
+
+
+@st.composite
+def traces(draw):
+    rtt_ms = draw(st.floats(20.0, 150.0))
+    if draw(st.booleans()):
+        return ("constant", draw(st.floats(0.2, 12.0)), rtt_ms, ())
+    points = tuple(
+        (t, draw(st.floats(0.2, 12.0)))
+        for t in sorted(draw(st.sets(st.sampled_from((0.0, 0.1, 0.25, 0.4, 0.8)),
+                                     min_size=1, max_size=3)))
+    )
+    return ("piecewise", None, rtt_ms, points)
+
+
+@st.composite
+def net_batch_cases(draw):
+    models = draw(model_sets())
+    policy = draw(st.sampled_from(("max_accuracy", "max_utility")))
+    params = (
+        {"alpha": draw(st.floats(1.0, 400.0))} if policy == "max_utility" else {}
+    )
+    scens = []
+    for _ in range(draw(st.integers(1, 2))):
+        stream = StreamSpec(
+            fps=draw(st.sampled_from((10.0, 30.0, 50.0))),
+            deadline=draw(st.sampled_from((15.0, 100.0, 200.0, 350.0))) / 1e3,
+        )
+        scens.append((stream, draw(st.integers(1, 20)), draw(traces())))
+    return models, policy, params, scens
+
+
+def _build_trace(kind, mbps, rtt_ms, points) -> Trace:
+    if kind == "constant":
+        return Trace.constant(mbps, rtt_ms=rtt_ms)
+    return Trace.piecewise(list(points), rtt_ms=rtt_ms)
+
+
+def _segments(kind, mbps, rtt_ms, points):
+    if kind == "constant":
+        return ((0.0, mbps * 1e6),)
+    return tuple((t, v * 1e6) for t, v in sorted(points))
+
+
+@SETTINGS
+@given(net_batch_cases())
+def test_network_batched_stats_equal_reference_simulate(case):
+    """For arbitrary profiles, streams, and (constant|piecewise) traces the
+    network-aware batched planners reproduce the reference ``simulate``
+    loop: integer stats exactly, accuracy sums within AUDIT_TOL."""
+    models, policy, params, scens = case
+    spec = PolicySpec(policy, params)
+    batch = [
+        BatchScenario(
+            stream=stream, n_frames=n, params=spec.resolved,
+            rtt=tr[2] / 1e3, bw_segments=_segments(*tr),
+        )
+        for stream, n, tr in scens
+    ]
+    out = simulate_batch(policy, models, batch)
+    assert len(out) == len(scens)
+    for (stream, n, tr), got in zip(scens, out):
+        ref = simulate(spec.build(), models, stream, _build_trace(*tr), n)
+        for f in INT_FIELDS:
+            assert getattr(got, f) == getattr(ref, f), (spec, stream, n, tr, f)
+        assert abs(got.accuracy_sum - ref.accuracy_sum) <= AUDIT_TOL, (spec, stream, n, tr)
+
+
 @SETTINGS
 @given(
     policy=st.sampled_from(("jax_accuracy", "local")),

@@ -209,13 +209,16 @@ def test_aggregate_accuracy_consistent_with_per_client_stats():
 # ---------------------------------------------------------------------------
 
 
-def test_python_policy_fleet_grid_warns_and_falls_back(caplog):
+def test_offloading_fleet_grid_warns_and_falls_back(caplog):
+    """max_accuracy is batched for single streams but offloads, so a fleet
+    of them contends for the shared link: no replication, no fleet planner
+    — the documented fallback fires."""
     session = _fleet_session(policy="max_accuracy")
     grid = SweepGrid(bandwidth_mbps=(6.0,), n_clients=(2,))
     with caplog.at_level(logging.WARNING, logger="repro.session"):
         report = session.run_sweep(grid, backend="batched")
     assert report.backend == "reference"
-    assert "no batched backend" in report.meta["fallback"]
+    assert "no batched fleet backend" in report.meta["fallback"]
     assert any("falling back" in r.message for r in caplog.records)
     # auto mode falls back silently (it never promised a batched engine).
     caplog.clear()
@@ -224,20 +227,56 @@ def test_python_policy_fleet_grid_warns_and_falls_back(caplog):
     assert auto.backend == "reference" and not caplog.records
 
 
-def test_piecewise_trace_fleet_grid_falls_back(caplog):
+def test_piecewise_trace_fleet_grid_matches_reference():
+    """Time-varying shared link: the fleet engine replays the piecewise
+    trace on device (allocation at round start, fluid rates at every event
+    boundary) and must match the reference event loop — this used to be a
+    fallback case."""
     session = Session(
         ScenarioSpec(
             policy=PolicySpec("offload"),
-            n_frames=8,
-            trace=TraceSpec(kind="piecewise", points=((0.0, 6.0), (0.3, 1.0))),
-            fleet=FleetSpec(n_clients=2),
+            n_frames=GOLD_FRAMES,
+            trace=TraceSpec(
+                kind="piecewise", points=((0.0, 6.0), (0.2, 1.5), (0.35, 9.0))
+            ),
+            fleet=FleetSpec(n_clients=2, capacity=2),
         )
     )
-    grid = SweepGrid(n_clients=(2, 3))
-    with caplog.at_level(logging.WARNING, logger="repro.session"):
-        report = session.run_sweep(grid, backend="batched")
-    assert report.backend == "reference"
-    assert "constant trace" in report.meta["fallback"]
+    grid = SweepGrid(
+        n_clients=(1, 2, 3), allocation=("weighted_fair", "priority", "fifo")
+    )
+    ref = session.run_sweep(grid, backend="reference")
+    bat = session.run_sweep(grid, backend="batched")
+    assert bat.backend == "batched" and bat.meta["engine"] == "sim_multi_batch"
+    _assert_fleet_reports_equal(ref, bat)
+    # the varying trace really bites: some uploads started at 6 Mbps finish
+    # into the 1.5 Mbps trough and miss their deadlines.
+    assert any(p.max_miss_rate > 0 for p in bat.points)
+
+
+def test_direct_fleet_scenario_piecewise_segments():
+    """FleetScenario.bw_segments drives the engine directly (no Session):
+    equivalence against simulate_multi over the same Trace.piecewise."""
+    pts = ((0.0, 5.0), (0.25, 1.0))
+    fleet = make_fleet(2, policy=PolicySpec("offload"))
+    sched = EdgeServerScheduler(fleet, policy="weighted_fair", capacity=2)
+    ms_ref = simulate_multi(sched, Trace.piecewise(list(pts)), GOLD_FRAMES)
+    (ms_bat, _), = simulate_multi_batch(
+        "offload",
+        list(fleet[0].models),
+        [
+            FleetScenario(
+                n_frames=GOLD_FRAMES,
+                bw_segments=tuple((t, v * 1e6) for t, v in pts),
+                n_clients=2,
+                allocation="weighted_fair",
+                capacity=2,
+            )
+        ],
+    )
+    assert ms_bat.server_jobs == ms_ref.server_jobs
+    assert ms_bat.miss_rates == ms_ref.miss_rates
+    assert abs(ms_bat.aggregate_accuracy - ms_ref.aggregate_accuracy) <= MULTI_TOL
 
 
 # ---------------------------------------------------------------------------
