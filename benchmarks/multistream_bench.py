@@ -2,16 +2,19 @@
 
 Two halves:
 
-1. **Backend ladder** (the default; emits ``BENCH_multistream.json``):
-   the same (bandwidth x deadline x n_clients x allocation) fleet grid of
-   interacting ``offload`` clients runs through both ``Session.run_sweep``
-   backends — the reference ``simulate_multi`` event loop and the
-   vectorized ``core/sim_multi_batch`` engine — at grid sizes
-   {10, 100, 1000}.  Every cell asserts equivalence (integer stats exact,
-   float stats within ``sim_multi_batch.MULTI_TOL``; bit-equality is
-   recorded as ``exact_match``).  Acceptance criterion tracked here: at
-   the 1000-point grid the batched engine is >= 10x faster than the
-   reference loop warm (``batched_cold_s`` includes jit compilation).
+1. **Backend ladders** (the default; emits ``BENCH_multistream.json``):
+   (bandwidth x deadline x n_clients x allocation) fleet grids of
+   interacting clients run through both ``Session.run_sweep`` backends —
+   the reference ``simulate_multi`` event loop and the vectorized
+   ``core/sim_multi_batch`` engine — at grid sizes {10, 100, 1000}, once
+   for the ``offload`` policy and once for the ``max_accuracy`` DP
+   planner (per-client dynamic programming over granted bandwidth, the
+   planner-fleet ladder).  Every cell asserts equivalence (integer stats
+   exact, float stats within ``sim_multi_batch.MULTI_TOL``; bit-equality
+   is recorded as ``exact_match``).  Acceptance criteria tracked here: at
+   the 1000-point grid the batched engine is >= 10x (offload) / >= 5x
+   (planner) faster than the reference loop warm (``batched_cold_s``
+   includes jit compilation).
 
 2. **Fleet behaviour tables** (``--tables``): per (bandwidth, policy,
    client-count) cell, fleet aggregate accuracy, worst per-client
@@ -46,6 +49,12 @@ CAPACITY = 4
 
 # Backend-ladder knobs (half 1).
 LADDER_FRAMES = 30
+# The DP planner reference loop costs far more per round than offload's
+# closed-form scoring; a shorter horizon and a coarser DP grid keep the
+# 1000-point reference run in CI-friendly territory without changing what
+# is measured (per-point planning + shared-link contention).
+PLANNER_FRAMES = 12
+PLANNER_PARAMS = {"grid": 10e-3}
 SIZES = (10, 100, 1000)
 DEFAULT_OUT = "BENCH_multistream.json"
 
@@ -128,27 +137,27 @@ def multistream_priority():
 # Half 1: reference vs batched fleet engine (BENCH_multistream.json)
 # ---------------------------------------------------------------------------
 
-def make_fleet_grid(size: int) -> SweepGrid:
+def make_fleet_grid(size: int, *, counts=(4, 8)) -> SweepGrid:
     """A (bandwidth x deadline x n_clients x allocation) fleet grid with
     exactly ``size`` points — every point an *interacting* fleet."""
     if size == 10:
         return SweepGrid(
             bandwidth_mbps=(2.0, 4.0, 6.0, 9.0, 12.0),
-            n_clients=(4,),
+            n_clients=counts[:1],
             allocation=("weighted_fair", "fifo"),
         )
     if size == 100:
         return SweepGrid(
             bandwidth_mbps=(1.0, 2.5, 6.0, 9.0, 12.0),
             deadline_ms=(150.0, 175.0, 200.0, 250.0, 350.0),
-            n_clients=(4, 8),
+            n_clients=counts,
             allocation=("weighted_fair", "fifo"),
         )
     if size == 1000:
         return SweepGrid(
             bandwidth_mbps=tuple(1.0 + 0.5 * i for i in range(25)),
             deadline_ms=tuple(120.0 + 25.0 * i for i in range(10)),
-            n_clients=(4, 8),
+            n_clients=counts,
             allocation=("weighted_fair", "fifo"),
         )
     raise ValueError(f"no predefined fleet grid of size {size}")
@@ -169,35 +178,61 @@ def _compare_points(ref, bat) -> tuple[bool, bool, float]:
     return ints_ok and max_diff <= MULTI_TOL, exact and ints_ok, max_diff
 
 
-def bench_cell(size: int) -> dict:
-    grid = make_fleet_grid(size)
+# Per-policy ladder knobs: (params, frames, fleet sizes, required warm
+# speedup at the 1000-point grid).
+LADDERS = {
+    "offload": ({}, LADDER_FRAMES, (4, 8), 10.0),
+    "max_accuracy": (PLANNER_PARAMS, PLANNER_FRAMES, (2, 4), 5.0),
+}
+
+_PROGRAM_CACHES = (
+    sim_multi_batch._fleet_program,
+    sim_multi_batch._acc_fleet_program,
+    sim_multi_batch._util_fleet_program,
+    sim_multi_batch._jax_acc_fleet_program,
+    sim_multi_batch._jax_util_fleet_program,
+)
+
+
+def bench_cell(size: int, policy: str = "offload", *, ref_repeats: int = 1,
+               warm_repeats: int = 2) -> dict:
+    params, frames, counts, _ = LADDERS[policy]
+    grid = make_fleet_grid(size, counts=counts)
     session = Session(
         ScenarioSpec(
-            policy=PolicySpec("offload"),
-            n_frames=LADDER_FRAMES,
+            policy=PolicySpec(policy, params),
+            n_frames=frames,
             trace=TraceSpec(mbps=6.0),
             fleet=FleetSpec(capacity=CAPACITY),
-            label=f"multistream_bench/offload/{size}",
+            label=f"multistream_bench/{policy}/{size}",
         )
     )
-    t0 = time.perf_counter()
-    ref = session.run_sweep(grid, backend="reference")
-    reference_s = time.perf_counter() - t0
+    # Best-of-N on both sides of the ratio: single-shot wall clocks on a
+    # shared CI box jitter by 20-30%, which is larger than the margin on the
+    # planner-ladder speedup gate.
+    reference_s = float("inf")
+    for _ in range(max(ref_repeats, 1)):
+        t0 = time.perf_counter()
+        ref = session.run_sweep(grid, backend="reference")
+        reference_s = min(reference_s, time.perf_counter() - t0)
     # Drop compiled programs carried over from smaller ladder cells so
     # batched_cold_s honestly includes this cell's jit compilation.
-    sim_multi_batch._fleet_program.cache_clear()
+    for cache in _PROGRAM_CACHES:
+        cache.cache_clear()
     t0 = time.perf_counter()
     session.run_sweep(grid, backend="batched")
     batched_cold_s = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    bat = session.run_sweep(grid, backend="batched")
-    batched_warm_s = time.perf_counter() - t0
+    batched_warm_s = float("inf")
+    for _ in range(max(warm_repeats, 1)):
+        t0 = time.perf_counter()
+        bat = session.run_sweep(grid, backend="batched")
+        batched_warm_s = min(batched_warm_s, time.perf_counter() - t0)
     assert bat.meta.get("engine") == "sim_multi_batch", bat.meta
     equivalent, exact, max_diff = _compare_points(ref, bat)
     return {
-        "policy": "offload",
+        "policy": policy,
         "grid_points": len(grid),
-        "n_frames": LADDER_FRAMES,
+        "n_frames": frames,
         "reference_s": reference_s,
         "batched_cold_s": batched_cold_s,
         "batched_warm_s": batched_warm_s,
@@ -209,24 +244,38 @@ def bench_cell(size: int) -> dict:
     }
 
 
-def run_ladder(sizes=SIZES) -> dict:
+def run_ladder(sizes=SIZES, policies=tuple(LADDERS)) -> dict:
     return {
         "bench": "multistream",
-        "policy": "offload",
-        "n_frames": LADDER_FRAMES,
         "tolerance": MULTI_TOL,
-        "cells": [bench_cell(size) for size in sizes],
+        "ladders": [
+            {
+                "policy": policy,
+                "n_frames": LADDERS[policy][1],
+                "params": LADDERS[policy][0],
+                # The planner reference sweep is cheap enough to repeat; the
+                # offload reference at 1000 points is the ladder's dominant
+                # cost, and its 10x gate has ample margin single-shot.
+                "cells": [
+                    bench_cell(size, policy,
+                               ref_repeats=2 if policy != "offload" else 1)
+                    for size in sizes
+                ],
+            }
+            for policy in policies
+        ],
     }
 
 
-# run.py auto-discovery: smoke-sized rows only (the 1000-point ladder is a
+# run.py auto-discovery: smoke-sized rows only (the 1000-point ladders are a
 # manual / CI-artifact run — see main()).
 def multistream_backend_smoke():
     rows = []
-    for cell in run_ladder(sizes=(10,))["cells"]:
-        name = f"multistream/{cell['policy']}/n{cell['grid_points']}"
-        rows.append((f"{name}/speedup_warm", cell["batched_warm_s"] * 1e6, cell["speedup_warm"]))
-        rows.append((f"{name}/equivalent", cell["reference_s"] * 1e6, float(cell["equivalent"])))
+    for ladder in run_ladder(sizes=(10,))["ladders"]:
+        for cell in ladder["cells"]:
+            name = f"multistream/{cell['policy']}/n{cell['grid_points']}"
+            rows.append((f"{name}/speedup_warm", cell["batched_warm_s"] * 1e6, cell["speedup_warm"]))
+            rows.append((f"{name}/equivalent", cell["reference_s"] * 1e6, float(cell["equivalent"])))
     return rows
 
 
@@ -274,17 +323,19 @@ def main(argv=None) -> int:
         json.dump(result, fh, indent=2)
         fh.write("\n")
 
-    print(f"{'points':>7} {'ref (s)':>9} {'cold (s)':>9} {'warm (s)':>9} "
+    print(f"{'policy':>14} {'points':>7} {'ref (s)':>9} {'cold (s)':>9} {'warm (s)':>9} "
           f"{'speedup':>8} {'equiv':>6} {'exact':>6}")
     ok = True
-    for c in result["cells"]:
-        print(f"{c['grid_points']:>7} {c['reference_s']:>9.2f} "
-              f"{c['batched_cold_s']:>9.2f} {c['batched_warm_s']:>9.2f} "
-              f"{c['speedup_warm']:>7.1f}x {str(c['equivalent']):>6} "
-              f"{str(c['exact_match']):>6}")
-        ok &= c["equivalent"]
-        if c["grid_points"] >= 1000:
-            ok &= c["speedup_warm"] >= 10.0
+    for ladder in result["ladders"]:
+        min_speedup = LADDERS[ladder["policy"]][3]
+        for c in ladder["cells"]:
+            print(f"{c['policy']:>14} {c['grid_points']:>7} {c['reference_s']:>9.2f} "
+                  f"{c['batched_cold_s']:>9.2f} {c['batched_warm_s']:>9.2f} "
+                  f"{c['speedup_warm']:>7.1f}x {str(c['equivalent']):>6} "
+                  f"{str(c['exact_match']):>6}")
+            ok &= c["equivalent"]
+            if c["grid_points"] >= 1000:
+                ok &= c["speedup_warm"] >= min_speedup
     print(f"\nwrote {args.out}")
 
     if args.tables:

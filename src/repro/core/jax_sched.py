@@ -587,7 +587,11 @@ def _utility_dp64(
     ),
     doc="Jitted Max-Accuracy local DP (every window frame on the NPU).",
     batched=True,
-    batched_multi=True,  # local-only plans: a fleet is N independent copies
+    # Fleet grids run the dedicated single-lane planner in
+    # core/sim_multi_batch: local-only plans never take an uplink lease,
+    # so one lane per scenario carries the whole homogeneous fleet while
+    # the allocation gates are counted exactly for the meta report.
+    batched_multi=True,
 )
 def plan_round_accuracy(
     models: Sequence[ModelProfile],
@@ -631,7 +635,11 @@ def plan_round_accuracy(
     ),
     doc="Jitted Max-Utility local DP (dominance-pruned front, skips allowed).",
     batched=True,
-    batched_multi=True,  # local-only plans: a fleet is N independent copies
+    # Fleet grids run the dedicated single-lane planner in
+    # core/sim_multi_batch: local-only plans never take an uplink lease,
+    # so one lane per scenario carries the whole homogeneous fleet while
+    # the allocation gates are counted exactly for the meta report.
+    batched_multi=True,
 )
 def plan_round_utility(
     models: Sequence[ModelProfile],

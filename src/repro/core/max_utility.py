@@ -168,9 +168,12 @@ def _local_decisions(
     doc="Paper §V Algorithm 2: per-round Max-Utility (rate + alpha * accuracy).",
     # Network-aware vectorized backend (core/sim_batch): whole scenario
     # grids — constant AND piecewise traces — run as one jit+vmap program.
-    # No batched_multi: these plans offload, so a fleet is NOT N independent
-    # replicas and fleet grids fall back to the reference loop.
+    # Fleet grids route to the dedicated fleet planner in core/sim_multi_batch:
+    # per-client DP planning over granted (water-filled) bandwidth composed
+    # with the shared-link completion audit, so contention is exact — not a
+    # replication trick.
     batched=True,
+    batched_multi=True,
 )
 def plan_round(
     models: Sequence[ModelProfile],

@@ -94,12 +94,14 @@ class PolicyEntry:
     so ``Session.run_sweep`` may execute whole scenario grids on device.
     ``batched_multi=True`` declares the *multi-stream* capability: the
     policy's rounds can be executed for whole fleets of interacting clients
-    (shared fluid uplink + edge-server queue) by
-    :mod:`repro.core.sim_multi_batch` — either through a dedicated fleet
-    planner there (``offload``) or, for ``batched`` local-only policies,
-    by per-client replication of the single-stream program (clients that
-    never touch the shared link are independent).  Policies without either
-    flag always run through the reference Python loops.
+    (shared fluid uplink + edge-server queue) by a dedicated fleet planner
+    in :mod:`repro.core.sim_multi_batch`.  Offloading planners (``offload``,
+    ``max_accuracy``, ``max_utility``) vmap per-client planning over granted
+    bandwidth and compose it with the water-filled shared link; local-only
+    planners (``jax_accuracy``, ``jax_utility``) run one lane per scenario
+    and replicate the identical client trajectory while counting the
+    allocation gates exactly.  Policies without either flag always run
+    through the reference Python loops.
     """
 
     name: str

@@ -749,15 +749,16 @@ class Session:
     def run_sweep(self, grid: SweepGrid, *, backend: str = "auto") -> SweepReport:
         """Run the base scenario across every point of ``grid``.
 
-        Backend routing: policies registered ``batched=True`` execute the
-        whole grid as one jit+vmap program (``core/sim_batch``) — the
-        network-aware planners (``max_accuracy``/``max_utility``) replay
-        constant and piecewise traces on device; fleet grids of
-        ``batched_multi=True`` policies execute through the vectorized
-        multi-stream engine (``core/sim_multi_batch`` — shared fluid
-        uplink with piecewise-constant trace replay, scheduler admission,
-        server queue on device, equivalence certified to
-        ``sim_multi_batch.MULTI_TOL``).  Anything else runs
+        Backend routing: single-stream grids of policies registered
+        ``batched=True`` execute as one jit+vmap program
+        (``core/sim_batch``) — the network-aware planners
+        (``max_accuracy``/``max_utility``) replay constant and piecewise
+        traces on device; fleet grids of ``batched_multi=True`` policies
+        execute through the vectorized multi-stream engine
+        (``core/sim_multi_batch`` — per-client DP planning over granted
+        bandwidth, shared fluid uplink with piecewise-constant trace
+        replay, scheduler admission, server queue on device, equivalence
+        certified to ``sim_multi_batch.MULTI_TOL``).  Anything else runs
         the per-point reference engines (``run_sim``, or ``run_multi``
         when the point has a fleet).  Requesting ``backend="batched"`` for
         a policy/grid combination without a vectorized engine logs a
@@ -797,12 +798,12 @@ class Session:
             use_batched = False
         t0 = time.perf_counter()
         if use_batched:
-            if entry.batched:
-                meta["engine"] = "sim_batch"
-                points = self._sweep_batched(specs, pts)
-            else:
+            if any(s.fleet is not None for s in specs):
                 meta["engine"] = "sim_multi_batch"
                 points = self._sweep_batched_multi(specs, pts)
+            else:
+                meta["engine"] = "sim_batch"
+                points = self._sweep_batched(specs, pts)
         else:
             points = [self._sweep_reference(s, p) for s, p in zip(specs, pts)]
         for hit, point in zip(clobbered, points):
@@ -825,23 +826,19 @@ class Session:
 
         Single-stream grids need ``batched=True`` (``sim_batch``); both
         engines replay constant *and* piecewise traces on device, so the
-        trace kind never gates routing.  Fleet grids accept either
-        ``batched=True`` AND ``batched_multi=True`` (local-only plans:
-        per-client replication — a policy that offloads, like the batched
-        ``max_accuracy``/``max_utility``, contends for the shared link and
-        must NOT be replicated) or ``batched_multi=True`` with a dedicated
-        fleet planner (``sim_multi_batch``), which additionally requires a
-        fleet at every point.
+        trace kind never gates routing.  Fleet grids need
+        ``batched_multi=True`` — every such policy has a dedicated fleet
+        planner in ``sim_multi_batch`` (offloading planners compose
+        per-client DP with the shared water-filled link; local-only
+        planners run one lane per scenario) — and a fleet at every grid
+        point (the engines do not mix fleet and single-stream lanes in
+        one program).
         """
         fleet_pts = sum(1 for s in specs if s.fleet is not None)
         if fleet_pts == 0:
             if entry.batched:
                 return True, ""
             return False, f"policy {entry.name!r} has no batched backend"
-        if entry.batched and entry.batched_multi:
-            # Declared local-only: clients never touch the link, so a fleet
-            # is N independent replicas of the single-stream program.
-            return True, ""
         if not entry.batched_multi:
             return False, f"policy {entry.name!r} has no batched fleet backend"
         if fleet_pts < len(specs):
@@ -872,24 +869,14 @@ class Session:
         stats = sim_batch.simulate_batch(
             base.policy.name, list(base.models), scens, strict=base.strict
         )
-        points = []
-        for spec, pt, st in zip(specs, pts, stats):
-            # Only local-only policies reach here with a fleet (capability
-            # gating): their clients never contend for the link or server,
-            # so a fleet of identical clients is N independent copies of
-            # the single-stream result (golden-tested vs run_multi).
-            n = spec.fleet.n_clients if spec.fleet is not None else 1
-            meta = {"policy": spec.policy.name}
-            if n > 1:
-                meta["replicated_clients"] = n
-            points.append(
-                SweepPoint(
-                    overrides=dict(pt),
-                    streams=[dataclasses.replace(st) for _ in range(n)],
-                    meta=meta,
-                )
+        return [
+            SweepPoint(
+                overrides=dict(pt),
+                streams=[st],
+                meta={"policy": spec.policy.name},
             )
-        return points
+            for spec, pt, st in zip(specs, pts, stats)
+        ]
 
     def _sweep_batched_multi(
         self, specs: list[ScenarioSpec], pts: list[dict[str, Any]]

@@ -54,9 +54,17 @@ def pytest_configure(config):
     )
 
 
+def run_slow_enabled(value: str | None) -> bool:
+    """Interpret the RUN_SLOW env var: unset / empty / common falsy spellings
+    ("0", "false", "no", "off", any case, surrounding whitespace) leave the
+    fast lane on; anything else enables the slow tests.  Kept as a pure
+    helper so CI forks can't silently regress the truthiness rules (see the
+    regression tests in test_conftest_runslow.py)."""
+    return (value or "").strip().lower() not in ("", "0", "false", "no", "off")
+
+
 def pytest_collection_modifyitems(config, items):
-    run_slow = os.environ.get("RUN_SLOW", "").strip().lower() not in ("", "0", "false")
-    if config.getoption("--runslow") or run_slow:
+    if config.getoption("--runslow") or run_slow_enabled(os.environ.get("RUN_SLOW")):
         return
     skip_slow = pytest.mark.skip(reason="slow: excluded from the fast lane (use --runslow)")
     for item in items:

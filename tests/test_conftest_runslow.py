@@ -1,0 +1,24 @@
+"""Regression tests for the RUN_SLOW env-var truthiness rules (conftest).
+
+A CI fork once enabled every slow test by exporting ``RUN_SLOW=0`` — any
+non-empty string was truthy.  The parsing now lives in one pure helper with
+an explicit falsy set; these tests pin it down.
+"""
+from __future__ import annotations
+
+import pytest
+
+from conftest import run_slow_enabled
+
+
+@pytest.mark.parametrize(
+    "value",
+    [None, "", "  ", "0", "false", "False", "FALSE", " 0 ", "no", "No", "off", "OFF"],
+)
+def test_falsy_values_keep_fast_lane(value):
+    assert run_slow_enabled(value) is False
+
+
+@pytest.mark.parametrize("value", ["1", "true", "True", "yes", "on", " 1 ", "anything"])
+def test_truthy_values_enable_slow_tests(value):
+    assert run_slow_enabled(value) is True

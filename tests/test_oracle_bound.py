@@ -17,7 +17,7 @@ from __future__ import annotations
 from repro.core import PolicySpec
 from repro.core.brute_force import exhaustive_best
 from repro.core.profiles import PAPER_MODELS, StreamSpec, network_mbps
-from repro.session import ScenarioSpec, Session, SweepGrid, TraceSpec
+from repro.session import FleetSpec, ScenarioSpec, Session, SweepGrid, TraceSpec
 
 # Small discretized instance: 2 offload resolutions keep the exhaustive
 # search at (2 NPU + 4 offload + skip)^5 states.
@@ -62,3 +62,47 @@ def test_batched_max_utility_never_beats_oracle():
             pt.overrides, pt.stats, opt,
         )
     assert any(p.stats.frames_processed > 0 for p in pts)
+
+
+# ---------------------------------------------------------------------------
+# Fleet grids through the batched multi-stream engine: contention only ever
+# *removes* options (uploads share the link, the server queue adds delay),
+# so each client's achievable set is a subset of the single-client action
+# space at the full bandwidth — the single-client oracle still bounds every
+# per-client result.
+# ---------------------------------------------------------------------------
+
+
+def _fleet_points(policy: str, params: dict):
+    spec = ScenarioSpec(
+        policy=PolicySpec(policy, params),
+        n_frames=N_FRAMES,
+        stream=STREAM,
+        trace=TraceSpec(mbps=BANDWIDTHS[0], rtt_ms=RTT_MS),
+        fleet=FleetSpec(n_clients=2, capacity=2),
+    )
+    rep = Session(spec).run_sweep(SweepGrid(bandwidth_mbps=BANDWIDTHS), backend="batched")
+    assert rep.backend == "batched"
+    assert rep.meta["engine"] == "sim_multi_batch"
+    return rep.points
+
+
+def test_fleet_max_accuracy_clients_never_beat_oracle():
+    pts = _fleet_points("max_accuracy", {})
+    for pt in pts:
+        net = network_mbps(pt.overrides["bandwidth_mbps"], rtt_ms=RTT_MS)
+        opt = exhaustive_best(list(PAPER_MODELS), STREAM, net, N_FRAMES)
+        for st in pt.streams:
+            assert st.mean_accuracy <= opt + TOL, (pt.overrides, st, opt)
+    assert any(s.frames_processed > 0 for p in pts for s in p.streams)
+
+
+def test_fleet_max_utility_clients_never_beat_oracle():
+    alpha = 100.0
+    pts = _fleet_points("max_utility", {"alpha": alpha})
+    for pt in pts:
+        net = network_mbps(pt.overrides["bandwidth_mbps"], rtt_ms=RTT_MS)
+        opt = exhaustive_best(list(PAPER_MODELS), STREAM, net, N_FRAMES, alpha=alpha)
+        for st in pt.streams:
+            assert st.utility(alpha) <= opt + alpha * TOL, (pt.overrides, st, opt)
+    assert any(s.frames_processed > 0 for p in pts for s in p.streams)

@@ -75,18 +75,14 @@ def _assert_fleet_reports_equal(ref, bat):
 def test_registry_flag_matches_fleet_planner_table():
     flagged = {n for n in available_policies() if get_policy(n).batched_multi}
     planners = set(multi_batched_policies())
-    # Every dedicated fleet planner must be flagged...
-    assert planners <= flagged
-    # ...and flagged policies WITHOUT a planner must be local-only batched
-    # ones, whose fleets run as independent replicas of the single-stream
-    # program (golden-tested against run_multi in test_sim_batch.py).
-    for name in flagged - planners:
-        assert get_policy(name).batched, name
+    # Every batched_multi policy has a dedicated fleet planner and vice
+    # versa — no replication shortcuts left in the table.
+    assert planners == flagged
 
 
 def test_unknown_policy_raises():
     with pytest.raises(ValueError, match="no batched fleet backend"):
-        simulate_multi_batch("max_accuracy", [], [FleetScenario()])
+        simulate_multi_batch("local", [], [FleetScenario()])
 
 
 # ---------------------------------------------------------------------------
@@ -205,15 +201,152 @@ def test_aggregate_accuracy_consistent_with_per_client_stats():
 
 
 # ---------------------------------------------------------------------------
+# Golden fleet lattices for the DP planners (newly batched_multi in this PR):
+# per-client planning over granted bandwidth + shared-link contention must
+# reproduce the reference event loop — ints exact, accuracy within MULTI_TOL.
+# ---------------------------------------------------------------------------
+
+PLANNERS = [
+    ("max_accuracy", {}),
+    ("max_utility", {"alpha": 150.0}),
+    ("jax_accuracy", {}),
+    ("jax_utility", {"alpha": 150.0}),
+]
+PLANNER_IDS = [p for p, _ in PLANNERS]
+
+
+@pytest.mark.parametrize("policy,params", PLANNERS, ids=PLANNER_IDS)
+def test_planner_fleet_grid_matches_reference_small(policy, params):
+    """Fast lane: every planner, shared 6 Mbps link across 2 clients,
+    weighted_fair (denials at capacity) + fifo (uncapped reservations)."""
+    session = _fleet_session(policy=policy, params=params)
+    grid = SweepGrid(n_clients=(2,), allocation=("weighted_fair", "fifo"))
+    ref = session.run_sweep(grid, backend="reference")
+    bat = session.run_sweep(grid, backend="batched")
+    assert bat.backend == "batched" and bat.meta["engine"] == "sim_multi_batch"
+    _assert_fleet_reports_equal(ref, bat)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy,params", PLANNERS, ids=PLANNER_IDS)
+def test_planner_fleet_golden_lattice_constant(policy, params):
+    """The full constant-trace lattice: every allocation policy, mixed fleet
+    sizes, bandwidths spanning starved to comfortable."""
+    session = _fleet_session(policy=policy, params=params)
+    grid = SweepGrid(
+        bandwidth_mbps=(1.0, 4.0, 9.0),
+        n_clients=(1, 2, 4),
+        allocation=("weighted_fair", "priority", "fifo"),
+    )
+    ref = session.run_sweep(grid, backend="reference")
+    bat = session.run_sweep(grid, backend="batched")
+    _assert_fleet_reports_equal(ref, bat)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy,params", PLANNERS, ids=PLANNER_IDS)
+def test_planner_fleet_golden_lattice_piecewise(policy, params):
+    """Piecewise shared link: uploads granted at 6 Mbps drain into a
+    1.5 Mbps trough; the fluid rates re-evaluate at every event boundary."""
+    session = Session(
+        ScenarioSpec(
+            policy=PolicySpec(policy, params),
+            n_frames=GOLD_FRAMES,
+            trace=TraceSpec(
+                kind="piecewise", points=((0.0, 6.0), (0.2, 1.5), (0.35, 9.0))
+            ),
+            fleet=FleetSpec(n_clients=2, capacity=2),
+        )
+    )
+    grid = SweepGrid(
+        n_clients=(1, 3), allocation=("weighted_fair", "priority", "fifo")
+    )
+    ref = session.run_sweep(grid, backend="reference")
+    bat = session.run_sweep(grid, backend="batched")
+    assert bat.meta["engine"] == "sim_multi_batch"
+    _assert_fleet_reports_equal(ref, bat)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy,params", PLANNERS, ids=PLANNER_IDS)
+def test_planner_fleet_capacity_zero_and_backlog_gated(policy, params):
+    """Admission edge cases: capacity 0 denies every lease (plans must fall
+    back to local-only rounds) and a tight backlog limit on a starved link
+    shuts the allocation gate mid-run."""
+    cap0 = _fleet_session(policy=policy, params=params, capacity=0)
+    grid0 = SweepGrid(n_clients=(2,), allocation=("weighted_fair", "fifo"))
+    _assert_fleet_reports_equal(
+        cap0.run_sweep(grid0, backend="reference"),
+        cap0.run_sweep(grid0, backend="batched"),
+    )
+    gated = Session(
+        ScenarioSpec(
+            policy=PolicySpec(policy, params),
+            n_frames=GOLD_FRAMES,
+            trace=TraceSpec(mbps=1.0),
+            fleet=FleetSpec(n_clients=3, capacity=2, backlog_limit=0.05),
+        )
+    )
+    gridb = SweepGrid(allocation=("weighted_fair",))
+    _assert_fleet_reports_equal(
+        gated.run_sweep(gridb, backend="reference"),
+        gated.run_sweep(gridb, backend="batched"),
+    )
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy,params", PLANNERS, ids=PLANNER_IDS)
+def test_planner_fleet_weights_priorities(policy, params):
+    """Non-uniform weights + priority tiers: effective-weight shares,
+    priority reservations and the intra-tick plan order all bite."""
+    session = Session(
+        ScenarioSpec(
+            policy=PolicySpec(policy, params),
+            n_frames=GOLD_FRAMES,
+            trace=TraceSpec(mbps=9.0),
+            fleet=FleetSpec(
+                n_clients=4,
+                allocation="priority",
+                capacity=1,
+                weights=(3.0, 1.0, 1.0, 0.5),
+                priorities=(0, 0, 2, 2),
+            ),
+        )
+    )
+    grid = SweepGrid(bandwidth_mbps=(4.0, 9.0))
+    _assert_fleet_reports_equal(
+        session.run_sweep(grid, backend="reference"),
+        session.run_sweep(grid, backend="batched"),
+    )
+
+
+# ---------------------------------------------------------------------------
 # Fallback routing
 # ---------------------------------------------------------------------------
 
 
-def test_offloading_fleet_grid_warns_and_falls_back(caplog):
-    """max_accuracy is batched for single streams but offloads, so a fleet
-    of them contends for the shared link: no replication, no fleet planner
-    — the documented fallback fires."""
-    session = _fleet_session(policy="max_accuracy")
+def test_offloading_fleet_grid_routes_batched_without_warning(caplog):
+    """Regression for the retired PR 5 fallback: fleet grids of the
+    offloading planners used to log "no batched fleet backend" and run the
+    reference loop.  They now route through the dedicated fleet planner in
+    ``sim_multi_batch`` with no fallback warning and no ``fallback`` meta."""
+    for policy, params in (("max_accuracy", {}), ("max_utility", {"alpha": 150.0})):
+        session = _fleet_session(policy=policy, params=params)
+        grid = SweepGrid(bandwidth_mbps=(6.0,), n_clients=(2,))
+        with caplog.at_level(logging.WARNING, logger="repro.session"):
+            report = session.run_sweep(grid, backend="batched")
+        assert report.backend == "batched"
+        assert report.meta["engine"] == "sim_multi_batch"
+        assert "fallback" not in report.meta
+        assert not any("falling back" in r.message for r in caplog.records)
+        caplog.clear()
+
+
+def test_python_only_fleet_grid_warns_and_falls_back(caplog):
+    """The genuine fallback still exists: a policy with no vectorized fleet
+    backend at all (``local``) logs the documented warning and runs the
+    reference loop."""
+    session = _fleet_session(policy="local")
     grid = SweepGrid(bandwidth_mbps=(6.0,), n_clients=(2,))
     with caplog.at_level(logging.WARNING, logger="repro.session"):
         report = session.run_sweep(grid, backend="batched")
