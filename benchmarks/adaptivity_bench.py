@@ -9,10 +9,17 @@ uploads and audited against the true trace, i.e. the deployable configuration.
 """
 from __future__ import annotations
 
-from repro.core import PolicySpec
-from repro.session import ScenarioSpec, Session, TraceSpec
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core import PolicySpec  # noqa: E402
+from repro.session import ScenarioSpec, Session, TraceSpec  # noqa: E402
 
 N_FRAMES = 240
+SMOKE_FRAMES = 60
 
 # WiFi-like square wave, 2 s period: points repeat far past the trace length.
 _SQUARE = TraceSpec(
@@ -24,22 +31,37 @@ _SQUARE = TraceSpec(
 )
 
 
-def _spec(policy: str) -> ScenarioSpec:
+def _spec(policy: str, n_frames: int = N_FRAMES) -> ScenarioSpec:
     return ScenarioSpec(
-        policy=PolicySpec(policy), n_frames=N_FRAMES, trace=_SQUARE, label="adaptivity"
+        policy=PolicySpec(policy), n_frames=n_frames, trace=_SQUARE, label="adaptivity"
     )
 
 
-def adaptivity():
+def adaptivity(n_frames: int = N_FRAMES):
     rows = []
     for name in ("max_accuracy", "local", "offload"):
-        st = Session(_spec(name)).run_sim().stats
+        st = Session(_spec(name, n_frames)).run_sim().stats
         rows.append((f"adapt/oracleB/{name}", st.schedule_time / max(st.schedule_calls, 1) * 1e6,
                      st.mean_accuracy))
-    st = Session(_spec("max_accuracy")).run_online().stats
+    st = Session(_spec("max_accuracy", n_frames)).run_online().stats
     rows.append(("adapt/estimatedB/max_accuracy",
                  st.schedule_time / max(st.schedule_calls, 1) * 1e6, st.mean_accuracy))
     return rows
 
 
 ALL = [adaptivity]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help=f"short trace ({SMOKE_FRAMES} frames; CI smoke)")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    for name, us, derived in adaptivity(SMOKE_FRAMES if args.smoke else N_FRAMES):
+        print(f"{name},{us:.2f},{derived:.6f}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -8,10 +8,18 @@ compiled dry-run artifacts).
 """
 from __future__ import annotations
 
+import argparse
+import sys
 import time
+from pathlib import Path
 
 import jax.numpy as jnp
 import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+# --smoke drops the larger shape per kernel (interpret mode is slow on CPU).
+_SMOKE = False
 
 
 def kernel_npu_matmul():
@@ -19,7 +27,8 @@ def kernel_npu_matmul():
 
     rows = []
     rng = np.random.default_rng(0)
-    for m, k, n in [(128, 512, 128), (256, 2048, 256)]:
+    shapes = [(128, 512, 128)] if _SMOKE else [(128, 512, 128), (256, 2048, 256)]
+    for m, k, n in shapes:
         x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
         w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
         out = ops.npu_matmul(x, w, interpret=True)
@@ -38,7 +47,10 @@ def kernel_flash_attention():
 
     rows = []
     rng = np.random.default_rng(1)
-    for b, s, h, kh, hd in [(1, 256, 8, 4, 64), (1, 512, 8, 8, 128)]:
+    shapes = (
+        [(1, 256, 8, 4, 64)] if _SMOKE else [(1, 256, 8, 4, 64), (1, 512, 8, 8, 128)]
+    )
+    for b, s, h, kh, hd in shapes:
         q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
         k = jnp.asarray(rng.normal(size=(b, s, kh, hd)), jnp.float32)
         v = jnp.asarray(rng.normal(size=(b, s, kh, hd)), jnp.float32)
@@ -53,3 +65,21 @@ def kernel_flash_attention():
 
 
 ALL = [kernel_npu_matmul, kernel_flash_attention]
+
+
+def main(argv=None) -> int:
+    global _SMOKE
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="smallest shape per kernel (CI smoke)")
+    args = ap.parse_args(argv)
+    _SMOKE = args.smoke
+    print("name,us_per_call,derived")
+    for bench in ALL:
+        for name, us, derived in bench():
+            print(f"{name},{us:.2f},{derived:.6f}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

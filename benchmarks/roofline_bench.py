@@ -23,3 +23,22 @@ def roofline_summary():
 
 
 ALL = [roofline_summary]
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    # --smoke is the benchmark entry-point contract (benchmarks/run.py);
+    # this bench only reads precomputed artifacts, so both modes are cheap.
+    ap.add_argument("--smoke", action="store_true",
+                    help="no-op here: the summary just reads dry-run artifacts")
+    ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    for name, us, derived in roofline_summary():
+        print(f"{name},{us:.2f},{derived:.6f}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -14,12 +14,23 @@ sys.path.insert(0, str(BENCH_DIR.parent))
 
 
 def discover_groups() -> list[tuple[str, list]]:
-    """(module_name, ALL) for every benchmark module in this directory."""
+    """(module_name, ALL) for every benchmark module in this directory.
+
+    Every ``*_bench.py`` must also expose ``main(argv)`` accepting
+    ``--smoke`` — the CI bench lane invokes exactly that, so a bench that
+    drops the flag (or the entry point) fails here at discovery time, not
+    silently in CI.
+    """
     groups = []
     for path in sorted(BENCH_DIR.glob("*.py")):
         if path.name.startswith("_") or path.stem in ("run", "make_experiments_tables"):
             continue
         mod = importlib.import_module(f"benchmarks.{path.stem}")
+        if path.name.endswith("_bench.py"):
+            if not callable(getattr(mod, "main", None)) or "--smoke" not in path.read_text():
+                raise AssertionError(
+                    f"benchmarks/{path.name} must expose main(argv) with a --smoke flag"
+                )
         all_ = getattr(mod, "ALL", None)
         if all_:
             groups.append((path.stem, list(all_)))

@@ -10,6 +10,8 @@ Public surface:
   baselines                   — Offload / Local / DeepDecision (§VI.C)
   brute_force                 — Optimal oracle (exhaustive + grid DP + policy)
   audit                       — backend-neutral plan-audit contract
+  tracking                    — detect+track workload class (WorkloadSpec,
+                                track_accuracy / track_fixed planners, oracle)
   simulator.simulate          — audited stream replay (reference loop)
   simulator.simulate_multi    — N streams, shared fluid uplink + server queue
   sim_batch.simulate_batch    — vectorized jit+vmap sweep backend
@@ -37,6 +39,7 @@ from . import (  # noqa: F401
     sim_batch,
     sim_multi_batch,
     simulator,
+    tracking,
 )
 from .sim_batch import BatchScenario, simulate_batch  # noqa: F401
 from .sim_multi_batch import FleetScenario, simulate_multi_batch  # noqa: F401
@@ -61,6 +64,7 @@ from .profiles import (  # noqa: F401
     profile_ms,
 )
 from .schedule import Decision, RoundPlan, StreamStats, Where  # noqa: F401
+from .tracking import WorkloadSpec, exhaustive_track_best  # noqa: F401
 from .simulator import (  # noqa: F401
     MultiStreamStats,
     Trace,

@@ -28,12 +28,18 @@ test in ``tests/test_sim_batch.py`` pins the two implementations together.
 """
 from __future__ import annotations
 
-from typing import Callable, Sequence
+from typing import Callable, NamedTuple, Sequence
 
 from .profiles import ModelProfile, StreamSpec
 from .schedule import RoundPlan, StreamStats, Where, validate_plan
 
-__all__ = ["AUDIT_TOL", "apply_round", "audit_round"]
+__all__ = [
+    "AUDIT_TOL",
+    "TrackState",
+    "apply_round",
+    "apply_track_round",
+    "audit_round",
+]
 
 # Feasibility tolerance (seconds) shared by every engine, batched included.
 AUDIT_TOL = 1e-9
@@ -105,3 +111,84 @@ def apply_round(
             stats.frames_offloaded += 1
             stats.accuracy_sum += m.accuracy(d.resolution, where="server")
     stats.frames_missed_deadline += len(bad_frames)
+
+
+class TrackState(NamedTuple):
+    """Detection-age state carried across rounds by the tracking workload.
+
+    ``det_acc`` is the accuracy of the last successful detection and
+    ``det_frame`` its absolute frame index (-1 before any detection, so a
+    frame-0 detection is strictly newer than the initial state).  The zero
+    initial accuracy makes pre-detection tracked frames score 0 with no
+    special-casing (any age times ``det_acc = 0`` is 0).
+    """
+
+    det_acc: float = 0.0
+    det_frame: int = -1
+
+
+def apply_track_round(
+    stats: StreamStats,
+    plan: RoundPlan,
+    *,
+    models: Sequence[ModelProfile],
+    stream: StreamSpec,
+    state: TrackState,
+    head: int,
+    n_frames: int,
+    horizon: int,
+    bad_frames: set[int],
+    retention: float,
+    on_offload: Callable[..., None] | None = None,
+) -> TrackState:
+    """Account one audited *tracking* round; return the new detection state.
+
+    Tracking extension of the audit contract: a round carries at most one
+    detection (the frame-0 decision) plus ``horizon`` tracker-carried
+    frames.  Accounting order is detection first, then tracked frames in
+    ascending frame order (the batched engines reproduce this summation
+    order):
+
+      * good detection — scores its fresh accuracy (processed, +offloaded
+        for SERVER) and refreshes the state to ``(accuracy, head)``; the
+        remaining ``horizon - 1`` frames track the *new* state;
+      * bad detection (in the bad set) — counts in
+        ``frames_missed_deadline`` via the bad set, the state is
+        unchanged, and the head frame is neither scored nor tracked;
+      * no detection (SKIP round) — every frame of the horizon, the head
+        included, coasts on the stale state;
+      * tracked frame ``f`` — always processed (the tracker is a cheap
+        local op that cannot miss), scoring
+        ``det_acc * retention ** (f - det_frame)``.
+
+    ``on_offload(decision, model)`` diverts a SERVER detection to the
+    shared-link engines; they score it — and refresh the state, guarded by
+    detection recency — at *actual* upload completion, so this helper
+    leaves the state untouched for that case.
+    """
+    det = next((d for d in plan.decisions if d.is_processed()), None)
+    track_from = head + 1
+    if det is None:
+        track_from = head  # SKIP round: the tracker carries the head too
+    elif det.frame in bad_frames:
+        pass  # audited infeasible: missed via the bad set, state unchanged
+    else:
+        m = models[det.model]
+        if det.where is Where.NPU:
+            acc = m.accuracy(stream.r_max, where="npu")
+            stats.frames_processed += 1
+            stats.accuracy_sum += acc
+            state = TrackState(acc, head)
+        elif on_offload is not None:
+            on_offload(det, m)  # scored + state-refreshed at completion
+        else:
+            acc = m.accuracy(det.resolution, where="server")
+            stats.frames_processed += 1
+            stats.frames_offloaded += 1
+            stats.accuracy_sum += acc
+            state = TrackState(acc, head)
+    for f in range(track_from, min(head + horizon, n_frames)):
+        stats.frames_processed += 1
+        stats.accuracy_sum += state.det_acc * retention ** (f - state.det_frame)
+    stats.frames_missed_deadline += len(bad_frames)
+    return state

@@ -55,6 +55,8 @@ class Param:
     default: Any = _REQUIRED
     nullable: bool = False
     doc: str = ""
+    lo: Any = None  # inclusive lower bound (numeric params only)
+    hi: Any = None  # inclusive upper bound (numeric params only)
 
     @property
     def required(self) -> bool:
@@ -62,12 +64,28 @@ class Param:
 
     # -- constructors used at registration sites ---------------------------
     @staticmethod
-    def number(name: str, default: Any = _REQUIRED, *, nullable: bool = False, doc: str = "") -> "Param":
-        return Param(name, (float, int), default, nullable, doc)
+    def number(
+        name: str,
+        default: Any = _REQUIRED,
+        *,
+        nullable: bool = False,
+        doc: str = "",
+        lo: Any = None,
+        hi: Any = None,
+    ) -> "Param":
+        return Param(name, (float, int), default, nullable, doc, lo, hi)
 
     @staticmethod
-    def integer(name: str, default: Any = _REQUIRED, *, nullable: bool = False, doc: str = "") -> "Param":
-        return Param(name, (int,), default, nullable, doc)
+    def integer(
+        name: str,
+        default: Any = _REQUIRED,
+        *,
+        nullable: bool = False,
+        doc: str = "",
+        lo: Any = None,
+        hi: Any = None,
+    ) -> "Param":
+        return Param(name, (int,), default, nullable, doc, lo, hi)
 
     def check(self, policy: str, value: Any) -> Any:
         if value is None:
@@ -81,6 +99,15 @@ class Param:
             raise ValueError(
                 f"policy {policy!r}: parameter {self.name!r} expects {want}, "
                 f"got {type(value).__name__} ({value!r})"
+            )
+        if (self.lo is not None and value < self.lo) or (
+            self.hi is not None and value > self.hi
+        ):
+            lo = "-inf" if self.lo is None else repr(self.lo)
+            hi = "+inf" if self.hi is None else repr(self.hi)
+            raise ValueError(
+                f"policy {policy!r}: parameter {self.name!r} must be in "
+                f"[{lo}, {hi}], got {value!r}"
             )
         return value
 
@@ -110,6 +137,10 @@ class PolicyEntry:
     doc: str = ""
     batched: bool = False
     batched_multi: bool = False
+    #: workload kinds this policy can plan for.  Classification policies
+    #: see independent frames; tracking policies (``workloads=("track",)``)
+    #: plan a detector placement *and* a detector interval per round.
+    workloads: tuple[str, ...] = ("classify",)
 
     def param(self, name: str) -> Param | None:
         for p in self.params:
@@ -150,6 +181,7 @@ def register_policy(
     doc: str = "",
     batched: bool = False,
     batched_multi: bool = False,
+    workloads: Sequence[str] = ("classify",),
 ) -> Callable:
     """Decorator: register ``fn`` as policy ``name`` with a parameter schema.
 
@@ -171,6 +203,7 @@ def register_policy(
             doc=doc or (fn.__doc__ or "").strip(),
             batched=batched,
             batched_multi=batched_multi,
+            workloads=tuple(workloads),
         )
         return fn
 
@@ -183,7 +216,14 @@ def _ensure_builtins() -> None:
     if _BUILTINS_LOADED:
         return
     _BUILTINS_LOADED = True
-    from . import baselines, brute_force, jax_sched, max_accuracy, max_utility  # noqa: F401
+    from . import (  # noqa: F401
+        baselines,
+        brute_force,
+        jax_sched,
+        max_accuracy,
+        max_utility,
+        tracking,
+    )
 
 
 def get_policy(name: str) -> PolicyEntry:

@@ -76,7 +76,9 @@ from .jax_sched import (
     _utility_dp64,
 )
 from .profiles import ModelProfile, StreamSpec
+from .registry import get_policy
 from .schedule import StreamStats
+from .tracking import WorkloadSpec, interval_means, retention, retention_powers
 
 __all__ = ["BatchScenario", "batched_policies", "simulate_batch"]
 
@@ -93,13 +95,19 @@ class BatchScenario:
     value applies (``simulator.Trace.piecewise`` semantics).  The local-only
     ``jax_*`` planners never consult the network; the network-aware
     ``max_accuracy`` / ``max_utility`` planners look bandwidth up at every
-    round's start time."""
+    round's start time.
+
+    ``workload`` is the executor's world truth (``tracking.WorkloadSpec``):
+    the ``track_*`` planners require ``kind="track"`` and score tracked
+    frames with its decay curve; the classification planners require the
+    default ``kind="classify"``."""
 
     stream: StreamSpec = field(default_factory=StreamSpec)
     n_frames: int = 120
     params: Mapping[str, Any] = field(default_factory=dict)
     rtt: float = 0.100
     bw_segments: tuple[tuple[float, float], ...] = ((0.0, 2.5e6),)
+    workload: WorkloadSpec = field(default_factory=WorkloadSpec)
 
 
 _PLANNERS: dict[str, Callable[..., list[StreamStats]]] = {}
@@ -138,6 +146,13 @@ def simulate_batch(
         raise ValueError(
             f"policy {policy!r} has no batched backend; available: {batched_policies()}"
         )
+    entry = get_policy(policy)
+    for s in scenarios:
+        if s.workload.kind not in entry.workloads:
+            raise ValueError(
+                f"policy {policy!r} plans {'/'.join(entry.workloads)} workloads, "
+                f"not {s.workload.kind!r}"
+            )
     if not scenarios:
         return []
     return fn(list(models), list(scenarios), bool(strict))
@@ -749,6 +764,168 @@ def _run_max_accuracy(models, scenarios, strict):
         return _collect(c, out[:5], time.perf_counter() - t0, offloaded=out[5])
 
     return _stitch(scenarios, _net_group_key, run_group)
+
+
+# ---------------------------------------------------------------------------
+# Detect+track planners (tracking.py): no bin DP — candidate scoring is
+# closed-form (fresh accuracy times a host-precomputed interval mean), so
+# the whole round is a handful of array expressions plus a short sequential
+# fold over the tracked frames.  One program serves both policies; ``fixed``
+# is a compile-time flag (track_fixed scores raw accuracy and always
+# consumes ``k`` frames, track_accuracy scores interval means and lets the
+# winning candidate set the horizon).  Decay tables (``retention_powers`` /
+# ``interval_means``) are computed on the host with the same Python
+# arithmetic the reference planners use, so every product on device
+# multiplies the identical float64 constants.
+# ---------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=None)
+def _track_program(S: int, J: int, R: int, KQ: int, A: int, strict: bool, fixed: bool):
+    def one(gamma, deadline, rtt, n_frames, k_lim, im, ret_pow,
+            acc_stat, nbits8, acc_sv, bw_t, bw_v, t_srv, t_npu64):
+        def cond(c):
+            return c[0] < n_frames
+
+        def body(c):
+            head, busy, det_acc, det_frm, acc_sum, proc, miss, offl, rounds, npu_s = c
+            active = head < n_frames
+            rounded = n_frames > 0  # traced, always true: _no_fma's gate
+            t0 = _no_fma(head.astype(jnp.float64) * gamma, rounded)
+            npu_free = jnp.maximum(0.0, busy - t0)
+            # NPU candidates: j ascending (the concat order below).
+            local = jnp.isfinite(t_npu64)
+            kf = jnp.where(local, jnp.ceil(t_npu64 / gamma), 0.0)
+            k_npu = jnp.maximum(kf.astype(jnp.int32), 1)  # [J] npu_interval
+            feas_npu = local & (npu_free + t_npu64 <= deadline) & (k_npu <= k_lim)
+            # Offload candidates: the reference's _server_candidates, r asc.
+            bw0 = _trace_bw(bw_t, bw_v, t0)
+            t_up = jnp.where(bw0 > 0.0, nbits8 / bw0, jnp.inf)  # [R]
+            budget = deadline - t_up - rtt  # [R]
+            fits = t_srv[:, None] <= budget[None, :]  # [J, R]
+            a_cand = jnp.where(fits, acc_sv, -jnp.inf)
+            j_best = jnp.argmax(a_cand, axis=0).astype(jnp.int32)  # first max
+            a_best = jnp.max(a_cand, axis=0)
+            r_ok = (budget > 0.0) & jnp.any(fits, axis=0)
+            k_srv = jnp.floor(jnp.where(r_ok, t_up, 0.0) / gamma).astype(jnp.int32) + 1
+            feas_srv = r_ok & (k_srv <= k_lim)
+            if fixed:
+                s_npu = jnp.where(feas_npu, acc_stat, -jnp.inf)
+                s_srv = jnp.where(feas_srv, a_best, -jnp.inf)
+            else:
+                s_npu = jnp.where(
+                    feas_npu, acc_stat * im[jnp.clip(k_npu - 1, 0, KQ - 1)], -jnp.inf
+                )
+                s_srv = jnp.where(
+                    feas_srv, a_best * im[jnp.clip(k_srv - 1, 0, KQ - 1)], -jnp.inf
+                )
+            # NPU-then-server candidate order with strict > first-wins is
+            # exactly a first-maximum argmax over the concatenation (real
+            # scores are >= 0, so -inf marks infeasible unambiguously).
+            scores = jnp.concatenate([s_npu, s_srv])
+            idx = jnp.argmax(scores).astype(jnp.int32)
+            exists = scores[idx] > -jnp.inf
+            det_npu = exists & (idx < J)
+            j_pick = jnp.clip(idx, 0, J - 1)
+            r_pick = jnp.clip(idx - J, 0, R - 1)
+            d_acc = jnp.where(det_npu, acc_stat[j_pick], a_best[r_pick])
+            k_det = jnp.where(det_npu, k_npu[j_pick], k_srv[r_pick])
+            if fixed:
+                horizon = k_lim  # the interval is consumed even on SKIP
+            else:
+                horizon = jnp.where(exists, k_det, 1)
+            fin_npu = npu_free + t_npu64[j_pick]
+            fin_srv = (t_up[r_pick] + rtt) + t_srv[j_best[r_pick]]
+            fin = jnp.where(det_npu, fin_npu, fin_srv)
+            if strict:
+                bad = exists & (fin > deadline + AUDIT_TOL)
+            else:
+                bad = jnp.bool_(False)
+            # Detection first (audit order), then tracked frames ascending.
+            take = active & exists & ~bad
+            acc_sum = acc_sum + jnp.where(take, d_acc, 0.0)
+            proc = proc + take.astype(jnp.int32)
+            offl = offl + (take & ~det_npu).astype(jnp.int32)
+            miss = miss + (active & bad).astype(jnp.int32)
+            det_acc = jnp.where(take, d_acc, det_acc)
+            det_frm = jnp.where(take, head, det_frm)
+            off0 = jnp.where(exists, 1, 0)  # SKIP tracks the head frame too
+
+            def tr(o, carry):
+                a_s, pr = carry
+                on = active & (o >= off0) & (o < horizon) & (head + o < n_frames)
+                age = jnp.clip(head + o - det_frm, 0, A - 1)
+                v = _no_fma(det_acc * ret_pow[age], rounded)
+                return a_s + jnp.where(on, v, 0.0), pr + on.astype(jnp.int32)
+
+            acc_sum, proc = jax.lax.fori_loop(0, KQ, tr, (acc_sum, proc))
+            npu_s = npu_s + jnp.where(active & det_npu, t_npu64[j_pick], 0.0)
+            busy_until = jnp.where(det_npu, fin_npu, npu_free)
+            head = jnp.where(active, head + horizon, head)
+            busy = jnp.where(active, t0 + busy_until, busy)
+            rounds = rounds + active.astype(jnp.int32)
+            return head, busy, det_acc, det_frm, acc_sum, proc, miss, offl, rounds, npu_s
+
+        init = (
+            jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float64),
+            jnp.zeros((), jnp.float64), jnp.full((), -1, jnp.int32),
+            jnp.zeros((), jnp.float64), jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float64),
+        )
+        out = jax.lax.while_loop(cond, body, init)
+        return out[4], out[5], out[6], out[8], out[9], out[7]
+
+    return jax.jit(jax.vmap(one, in_axes=(0,) * 12 + (None,) * 2))
+
+
+def _run_track(models, scenarios, strict, *, fixed: bool):
+    t_srv = np.array([m.t_server for m in models], np.float64)
+    kname = "k" if fixed else "k_max"
+
+    def key_fn(s):
+        # KQ bounds the horizon (and the tracked-frame fold length); A sizes
+        # the retention table — ages reach n_frames with the -1 initial state.
+        return (_quant_w(int(s.params[kname])), len(s.stream.resolutions),
+                _quant_pow2(s.n_frames + 1))
+
+    def run_group(key, group):
+        KQ, R, A = key
+        c = _common(models, group, W=1)  # windows are a classify concept
+        B = len(group)
+        k_lim = np.array([int(s.params[kname]) for s in group], np.int32)
+        im = np.zeros((B, KQ), np.float64)
+        if not fixed:
+            # interval_means is prefix-stable, so padding KQ past a lane's
+            # k_max cannot change any entry the planner may select.
+            for i, s in enumerate(group):
+                ret_b = retention(float(s.params["decay"]), float(s.params["density"]))
+                im[i, :] = interval_means(ret_b, KQ)
+        ret_pow = np.empty((B, A), np.float64)
+        for i, s in enumerate(group):
+            ret_pow[i, :] = retention_powers(s.workload.retention, A)
+        rtt, bw_t, bw_v, S = _net_arrays(group)
+        nbits8, acc_sv = _offload_tables(models, group)
+        t0 = time.perf_counter()
+        with enable_x64():
+            out = _track_program(S, c.J, R, KQ, A, strict, fixed)(
+                c.gamma, c.deadline, rtt, c.n_frames, k_lim, im, ret_pow,
+                c.acc_stat64, nbits8, acc_sv, bw_t, bw_v, t_srv, c.t_npu64,
+            )
+            out = [np.asarray(a) for a in out]
+        return _collect(c, out[:5], time.perf_counter() - t0, offloaded=out[5])
+
+    return _stitch(scenarios, key_fn, run_group)
+
+
+@_planner("track_accuracy")
+def _run_track_accuracy(models, scenarios, strict):
+    return _run_track(models, scenarios, strict, fixed=False)
+
+
+@_planner("track_fixed")
+def _run_track_fixed(models, scenarios, strict):
+    return _run_track(models, scenarios, strict, fixed=True)
 
 
 @lru_cache(maxsize=None)

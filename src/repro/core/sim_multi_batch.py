@@ -98,6 +98,7 @@ from .jax_sched import (
     _utility_dp64,
 )
 from .profiles import ModelProfile, StreamSpec
+from .registry import get_policy
 from .schedule import StreamStats
 from .sim_batch import (
     _UTIL_CAP,
@@ -113,6 +114,7 @@ from .sim_batch import (
     segment_arrays,
 )
 from .simulator import _BITS_EPS, _EPS, MultiStreamStats
+from .tracking import WorkloadSpec, interval_means, retention, retention_powers
 
 __all__ = [
     "EQUIV_INT_FIELDS",
@@ -151,7 +153,12 @@ class FleetScenario:
     ``(t_start_s, bandwidth_bps)`` segments replayed on device (allocation
     reads bandwidth at each round's start, the fluid link at every event
     boundary, exactly like the reference's ``trace.at``) — or, when that is
-    ``None``, the constant ``bandwidth_bps``."""
+    ``None``, the constant ``bandwidth_bps``.
+
+    ``workload`` is the fleet's world truth (``tracking.WorkloadSpec``):
+    the ``track_*`` planners require ``kind="track"`` (detections contend
+    on the shared uplink, tracker-carried frames do not), the classification
+    planners the default ``kind="classify"``."""
 
     stream: StreamSpec = field(default_factory=StreamSpec)
     n_frames: int = 120
@@ -165,6 +172,7 @@ class FleetScenario:
     priorities: tuple[int, ...] | None = None
     params: Mapping[str, Any] = field(default_factory=dict)
     bw_segments: tuple[tuple[float, float], ...] | None = None
+    workload: WorkloadSpec = field(default_factory=WorkloadSpec)
 
 
 _PLANNERS: dict[str, Callable[..., list[tuple[MultiStreamStats, dict]]]] = {}
@@ -212,6 +220,13 @@ def simulate_multi_batch(
             f"policy {policy!r} has no batched fleet backend; "
             f"available: {multi_batched_policies()}"
         )
+    entry = get_policy(policy)
+    for s in scenarios:
+        if s.workload.kind not in entry.workloads:
+            raise ValueError(
+                f"policy {policy!r} plans {'/'.join(entry.workloads)} workloads, "
+                f"not {s.workload.kind!r}"
+            )
     if not scenarios:
         return []
     return fn(list(models), list(scenarios), bool(strict))
@@ -1630,3 +1645,264 @@ def _run_jax_utility_fleet(models, scenarios, strict):
         lambda s: (_quant_w(_window_frames(s.stream, s.params)), int(s.params["width"])),
         run_group,
     )
+
+
+# ---------------------------------------------------------------------------
+# Detect+track fleet planners: the sim_batch closed-form round (interval-mean
+# candidate scoring, no bin DP) composed with the shared fleet physics.
+# Detections contend — an offloaded detection registers on the fluid uplink
+# and is audited (and installed into the client's detection state) at actual
+# on-time completion, the reference's on_offload path — while tracker-carried
+# frames are free local work that scores at the plan event against the state
+# current there.  The detection state is the max-det_frame merge of plan-time
+# NPU refreshes and completed on-time offloads, recomputed from the upload
+# logs after every link drain (NPU refreshes always carry the newest frame at
+# their plan event, and completion installs are recency-guarded in the
+# reference, so the merge reproduces the event-ordered updates exactly).
+# ---------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=None)
+def _track_fleet_program(alloc: str, N: int, K: int, F: int, KQ: int, S: int,
+                         J: int, R: int, fixed: bool):
+    A = F + 1  # retention-table width: ages reach F with the -1 initial state
+
+    def one(bw_t, bw_v, gamma, deadline, rtt, L, k_lim, im, ret_pow, acc_stat,
+            w_fluid, w_eff, tot_w, prio, order, bits_r, acc_sv, t_srv, t_npu64):
+        phys = _fleet_physics(
+            alloc, N, K, F, bw_t=bw_t, bw_v=bw_v, rtt=rtt, L=L,
+            w_fluid=w_fluid, w_eff=w_eff, tot_w=tot_w, prio=prio,
+        )
+        cids = jnp.arange(N, dtype=jnp.int32)
+        rounded = k_lim > 0  # traced, always true: _no_fma's gate
+        # NPU candidates are round-invariant: j ascending, npu_interval.
+        local = jnp.isfinite(t_npu64)
+        kf = jnp.where(local, jnp.ceil(t_npu64 / gamma), 0.0)
+        k_npu = jnp.maximum(kf.astype(jnp.int32), 1)  # [J]
+
+        def make_plan_one(k, t0, released):
+            def plan_one(rank, pc):
+                (st, act_bps, det_acc, det_frm, q_detfrm,
+                 planning_v, off0_v, hor_v) = pc
+                c = order[rank]
+                planning = st.head[c] == k
+                grant, denied = phys.allocate(st, c, t0, released, act_bps)
+                st = st._replace(
+                    grants=st.grants + jnp.where(planning & ~denied, 1, 0),
+                    denials=st.denials + jnp.where(planning & denied, 1, 0),
+                )
+                npu_free = jnp.maximum(0.0, st.busy[c] - t0)
+                feas_npu = local & (npu_free + t_npu64 <= deadline) & (k_npu <= k_lim)
+                # The reference plans against NetworkState(grant, rtt).
+                t_up = jnp.where(grant > 0.0, bits_r / grant, jnp.inf)  # [R]
+                budget = deadline - t_up - rtt  # [R]
+                fits = t_srv[:, None] <= budget[None, :]  # [J, R]
+                a_cand = jnp.where(fits, acc_sv, -jnp.inf)
+                j_best = jnp.argmax(a_cand, axis=0).astype(jnp.int32)  # first max
+                a_best = jnp.max(a_cand, axis=0)
+                r_ok = (budget > 0.0) & jnp.any(fits, axis=0)
+                k_srv = jnp.floor(
+                    jnp.where(r_ok, t_up, 0.0) / gamma
+                ).astype(jnp.int32) + 1
+                feas_srv = r_ok & (k_srv <= k_lim)
+                if fixed:
+                    s_npu = jnp.where(feas_npu, acc_stat, -jnp.inf)
+                    s_srv = jnp.where(feas_srv, a_best, -jnp.inf)
+                else:
+                    s_npu = jnp.where(
+                        feas_npu,
+                        acc_stat * im[jnp.clip(k_npu - 1, 0, KQ - 1)], -jnp.inf,
+                    )
+                    s_srv = jnp.where(
+                        feas_srv,
+                        a_best * im[jnp.clip(k_srv - 1, 0, KQ - 1)], -jnp.inf,
+                    )
+                # NPU-then-server candidate order with strict > first-wins ==
+                # first-maximum argmax over the concatenation (sim_batch's
+                # rendering of the reference planners).
+                scores = jnp.concatenate([s_npu, s_srv])
+                idx = jnp.argmax(scores).astype(jnp.int32)
+                exists = scores[idx] > -jnp.inf
+                is_npu = exists & (idx < J)
+                is_srv = exists & ~is_npu
+                j_pick = jnp.clip(idx, 0, J - 1)
+                r_pick = jnp.clip(idx - J, 0, R - 1)
+                k_det = jnp.where(is_npu, k_npu[j_pick], k_srv[r_pick])
+                if fixed:
+                    horizon = k_lim  # the interval is consumed even on SKIP
+                else:
+                    horizon = jnp.where(exists, k_det, 1)
+                # NPU detection: scored and state-refreshed at the plan event.
+                npu_take = planning & is_npu
+                acc_j = acc_stat[j_pick]
+                st = st._replace(
+                    accs=st.accs.at[c].add(jnp.where(npu_take, acc_j, 0.0)),
+                    proc=st.proc.at[c].add(jnp.where(npu_take, 1, 0)),
+                    npus=st.npus.at[c].add(
+                        jnp.where(npu_take, t_npu64[j_pick], 0.0)
+                    ),
+                )
+                det_acc = det_acc.at[c].set(jnp.where(npu_take, acc_j, det_acc[c]))
+                det_frm = det_frm.at[c].set(jnp.where(npu_take, k, det_frm[c]))
+                # Offloaded detection: register on the shared link (audited
+                # and installed at actual completion); state stays stale for
+                # this round's tracked frames, exactly like on_offload.
+                on_srv = planning & is_srv
+                j_star = j_best[r_pick]
+                e = jnp.clip(st.tail[c], 0, F - 1)
+                q_detfrm = q_detfrm.at[c, e].set(
+                    jnp.where(on_srv, k, q_detfrm[c, e])
+                )
+                st, act_bps = phys.register(
+                    st, act_bps, c, on=on_srv, t0=t0, seq=k * N + rank,
+                    grant=grant, bits=bits_r[r_pick], ddl=t0 + deadline,
+                    acc=acc_sv[j_star, r_pick], tsv=t_srv[j_star],
+                )
+                busy_until = jnp.where(is_npu, npu_free + t_npu64[j_pick], npu_free)
+                st = st._replace(
+                    busy=st.busy.at[c].set(
+                        jnp.where(planning, t0 + busy_until, st.busy[c])
+                    ),
+                    head=st.head.at[c].add(jnp.where(planning, horizon, 0)),
+                    rounds=st.rounds.at[c].add(jnp.where(planning, 1, 0)),
+                )
+                return (st, act_bps, det_acc, det_frm, q_detfrm,
+                        planning_v.at[c].set(planning),
+                        off0_v.at[c].set(jnp.where(exists, 1, 0)),
+                        hor_v.at[c].set(horizon))
+
+            return plan_one
+
+        def round_cond(carry):
+            return jnp.min(carry[0].head) < F
+
+        def round_body(carry):
+            st, det_acc, det_frm, q_detfrm = carry
+            k = jnp.min(st.head)
+            t0 = _no_fma(k.astype(jnp.float64) * gamma, rounded)
+            st = phys.drain(st, t0, advance_to_target=True)
+            released = jnp.sum(
+                (st.q_srvfin <= t0 + _EPS).astype(jnp.int32), axis=1
+            )
+            # Install completed on-time offloaded detections: recency-merge
+            # the newest (max det_frame) against the plan-time NPU state.
+            done = st.q_srvfin + rtt <= st.q_ddl + _EPS
+            m_frm = jnp.where(done, q_detfrm, -1)
+            bi = jnp.argmax(m_frm, axis=1).astype(jnp.int32)
+            srv_frm = m_frm[cids, bi]
+            newer = srv_frm > det_frm
+            det_frm = jnp.where(newer, srv_frm, det_frm)
+            det_acc = jnp.where(newer, st.q_acc[cids, bi], det_acc)
+
+            zb = jnp.zeros((N,), bool)
+            zi = jnp.zeros((N,), jnp.int32)
+            (st, _, det_acc, det_frm, q_detfrm,
+             planning, off0, hor) = jax.lax.fori_loop(
+                0, N, make_plan_one(k, t0, released),
+                (st, phys.active_link_bps(st), det_acc, det_frm, q_detfrm,
+                 zb, zi, zi),
+            )
+
+            # Tracked frames depend only on the client's own post-plan state,
+            # so the sequential fold batches over clients OUTSIDE the
+            # allocate/register chain (ascending frame order per client —
+            # the apply_track_round accumulation order).
+            def finalize(c, on_c, off0_c, hor_c):
+                def tr(o, a_pr):
+                    a_s, pr = a_pr
+                    on = on_c & (o >= off0_c) & (o < hor_c) & (k + o < F)
+                    age = jnp.clip(k + o - det_frm[c], 0, A - 1)
+                    v = _no_fma(det_acc[c] * ret_pow[age], rounded)
+                    return a_s + jnp.where(on, v, 0.0), pr + on.astype(jnp.int32)
+
+                return jax.lax.fori_loop(0, KQ, tr, (st.accs[c], st.proc[c]))
+
+            acc_v, proc_v = jax.vmap(finalize)(cids, planning, off0, hor)
+            st = st._replace(
+                accs=jnp.where(planning, acc_v, st.accs),
+                proc=jnp.where(planning, proc_v, st.proc),
+            )
+            return st, det_acc, det_frm, q_detfrm
+
+        init = (
+            phys.init_state(),
+            jnp.zeros((N,), jnp.float64),
+            jnp.full((N,), -1, jnp.int32),
+            jnp.full((N, F), -1, jnp.int32),
+        )
+        st = phys.finish(jax.lax.while_loop(round_cond, round_body, init)[0])
+        return (st.accs, st.proc, st.miss, st.offl, st.rounds, st.npus,
+                st.grants, st.denials, st.sjobs, st.sbusy)
+
+    return jax.jit(jax.vmap(one, in_axes=(0,) * 15 + (None,) * 4))
+
+
+def _run_track_fleet(models, scenarios, strict, *, fixed: bool):
+    # ``strict`` has no observable effect: the plan-time audit is NPU-only
+    # here (offloads audit at completion), and the track planners only emit
+    # deadline-feasible NPU detections.
+    del strict
+    t_srv = np.array([m.t_server for m in models], np.float64)
+    kname = "k" if fixed else "k_max"
+
+    def key_fn(s: FleetScenario) -> tuple:
+        return (
+            s.allocation,
+            int(s.n_clients),
+            int(s.capacity),
+            int(s.n_frames),
+            tuple(s.stream.resolutions),
+            float(s.stream.png_ratio),
+            _quant_w(int(s.params[kname])),
+        )
+
+    def run_group(key, group):
+        alloc, N, K, F, resolutions, png_ratio, KQ = key
+        R = len(resolutions)
+        c = _common(models, _shims(group), 1)  # windows are a classify concept
+        B_ = len(group)
+        k_lim = np.array([int(s.params[kname]) for s in group], np.int32)
+        im = np.zeros((B_, KQ), np.float64)
+        if not fixed:
+            # interval_means is prefix-stable: padding KQ past a lane's k_max
+            # cannot change any entry the planner may select.
+            for i, s in enumerate(group):
+                ret_b = retention(float(s.params["decay"]), float(s.params["density"]))
+                im[i, :] = interval_means(ret_b, KQ)
+        ret_pow = np.empty((B_, F + 1), np.float64)
+        for i, s in enumerate(group):
+            ret_pow[i, :] = retention_powers(s.workload.retention, F + 1)
+        bits_r = np.array(
+            [group[0].stream.frame_bytes(r) * 8.0 for r in resolutions], np.float64
+        )
+        acc_sv = np.array(
+            [[m.accuracy(r, where="server") for r in resolutions] for m in models],
+            np.float64,
+        )
+        bw_t, bw_v, S = _segments(group)
+        rtt = np.array([s.rtt for s in group], np.float64)
+        L = np.array([s.backlog_limit for s in group], np.float64)
+        w_fluid, w_eff, tot_w, prio, order = _fleet_host_arrays(group, N, alloc)
+
+        program = _track_fleet_program(alloc, N, K, F, KQ, S, c.J, R, fixed)
+        t0 = time.perf_counter()
+        with enable_x64():
+            out = program(
+                bw_t, bw_v, c.gamma, c.deadline, rtt, L, k_lim, im, ret_pow,
+                c.acc_stat64, w_fluid, w_eff, tot_w, prio, order,
+                bits_r, acc_sv, t_srv, c.t_npu64,
+            )
+            out = [np.asarray(a) for a in out]
+        return _fleet_results(group, out, time.perf_counter() - t0)
+
+    return _stitch(scenarios, key_fn, run_group)
+
+
+@_planner("track_accuracy")
+def _run_track_accuracy_fleet(models, scenarios, strict):
+    return _run_track_fleet(models, scenarios, strict, fixed=False)
+
+
+@_planner("track_fixed")
+def _run_track_fixed_fleet(models, scenarios, strict):
+    return _run_track_fleet(models, scenarios, strict, fixed=True)

@@ -24,10 +24,11 @@ import time
 from dataclasses import dataclass
 from typing import Callable, Protocol, Sequence
 
-from .audit import apply_round, audit_round
+from .audit import TrackState, apply_round, apply_track_round, audit_round
 from .edge_server import fluid_rates
 from .profiles import ModelProfile, NetworkState, StreamSpec
 from .schedule import RoundPlan, StreamStats
+from .tracking import WorkloadSpec
 
 
 class Policy(Protocol):
@@ -54,8 +55,25 @@ class Trace:
 
     @staticmethod
     def piecewise(points: Sequence[tuple[float, float]], rtt_ms: float = 100.0) -> "Trace":
-        """points: [(t_start, mbps), ...] sorted by t_start."""
-        pts = sorted(points)
+        """points: [(t_start, mbps), ...] with strictly increasing t_start.
+
+        Non-monotonic time points or negative bandwidth raise ``ValueError``
+        up front instead of producing silent nonsense lookups later.
+        """
+        pts = list(points)
+        if not pts:
+            raise ValueError("piecewise trace needs at least one (t_start, mbps) point")
+        for (t0, _), (t1, _) in zip(pts, pts[1:]):
+            if t1 <= t0:
+                raise ValueError(
+                    f"piecewise trace time points must be strictly increasing, "
+                    f"got t={t1!r} after t={t0!r}"
+                )
+        for ts, v in pts:
+            if v < 0:
+                raise ValueError(
+                    f"piecewise trace bandwidth must be >= 0 Mbps, got {v!r} at t={ts!r}"
+                )
 
         def bw(t: float) -> float:
             cur = pts[0][1]
@@ -80,13 +98,22 @@ def simulate(
     n_frames: int,
     *,
     strict: bool = True,
+    workload: WorkloadSpec | None = None,
 ) -> StreamStats:
     """Run ``policy`` over ``n_frames`` frames; return audited stream stats.
 
     The audit semantics (what validates, what scores, what counts missed)
     live in :mod:`repro.core.audit` and are shared with the vectorized
     ``sim_batch`` backend — this loop is the reference implementation.
+
+    ``workload`` selects the frame semantics: ``None`` / ``"classify"``
+    keeps the paper's independent frames; ``"track"`` executes rounds as
+    detect+track intervals (``audit.apply_track_round``), carrying the
+    detection-age state across rounds.
     """
+    track = workload is not None and workload.is_track
+    ret = workload.retention if track else 0.0
+    state = TrackState()
     stats = StreamStats(frames_total=n_frames, elapsed=n_frames * stream.gamma)
     gamma = stream.gamma
     head = 0
@@ -102,16 +129,30 @@ def simulate(
         horizon, bad_frames = audit_round(
             plan, gamma=gamma, deadline=stream.deadline, strict=strict
         )
-        apply_round(
-            stats,
-            plan,
-            models=models,
-            stream=stream,
-            head=head,
-            n_frames=n_frames,
-            horizon=horizon,
-            bad_frames=bad_frames,
-        )
+        if track:
+            state = apply_track_round(
+                stats,
+                plan,
+                models=models,
+                stream=stream,
+                state=state,
+                head=head,
+                n_frames=n_frames,
+                horizon=horizon,
+                bad_frames=bad_frames,
+                retention=ret,
+            )
+        else:
+            apply_round(
+                stats,
+                plan,
+                models=models,
+                stream=stream,
+                head=head,
+                n_frames=n_frames,
+                horizon=horizon,
+                bad_frames=bad_frames,
+            )
         npu_busy_abs = t0 + plan.npu_busy_until
         head += horizon
     return stats
@@ -167,6 +208,11 @@ class _Upload:
     t_server: float
     rtt: float
     start_at: float = 0.0  # abs time the frame exists and may start uploading
+    # Tracking workload only: absolute frame index of the detection this
+    # upload carries (-1 for classification frames).  On on-time completion
+    # the client's TrackState refreshes iff this is newer than what a later
+    # NPU detection may already have installed.
+    det_frame: int = -1
 
 
 @dataclass
@@ -221,6 +267,7 @@ def simulate_multi(
     n_frames: int,
     *,
     strict: bool = True,
+    workload: WorkloadSpec | None = None,
 ) -> MultiStreamStats:
     """Drive every client of ``scheduler`` (an ``EdgeServerScheduler``) for
     ``n_frames`` frames each over one shared ``trace``.
@@ -232,13 +279,23 @@ def simulate_multi(
     time, then a server worker (FIFO queue over ``scheduler.capacity`` slots),
     then the RTT — so a plan that assumed more bandwidth than the link really
     delivers shows up as deadline misses here, not as optimistic accuracy.
+
+    With a tracking ``workload``, detections contend on the shared link but
+    tracker-carried frames do not: NPU detections refresh the client's
+    detection state at the planning event, offloaded detections at their
+    *actual* on-time completion (guarded by detection recency, so a slow
+    upload never clobbers a newer NPU detection), and tracked frames score
+    against the state current at their round's planning event.
     """
     scheduler.reset()  # clock restarts at 0; stale leases/backlog must not leak in
+    track = workload is not None and workload.is_track
+    ret = workload.retention if track else 0.0
     clients = list(scheduler.clients.values())
     stats = {
         c.client_id: StreamStats(frames_total=n_frames, elapsed=n_frames * c.stream.gamma)
         for c in clients
     }
+    tstate = {c.client_id: TrackState() for c in clients}
     head = {c.client_id: 0 for c in clients}
     npu_busy_abs = {c.client_id: 0.0 for c in clients}
     uploads: list[_Upload] = []
@@ -336,6 +393,8 @@ def simulate_multi(
                 s.frames_processed += 1
                 s.frames_offloaded += 1
                 s.accuracy_sum += u.accuracy
+                if track and u.det_frame > tstate[u.client_id].det_frame:
+                    tstate[u.client_id] = TrackState(u.accuracy, u.det_frame)
             else:
                 s.frames_missed_deadline += 1
         uploads = still
@@ -380,20 +439,37 @@ def simulate_multi(
                     # transmit before it exists (matters for policies that
                     # offload non-head frames, e.g. DeepDecision).
                     start_at=t0 + max(d.start, 0.0),
+                    # Tracking: the upload carries this round's detection.
+                    det_frame=head[cid] + d.frame if track else -1,
                 )
             )
 
-        apply_round(
-            s,
-            plan,
-            models=client.models,
-            stream=client.stream,
-            head=head[cid],
-            n_frames=n_frames,
-            horizon=horizon,
-            bad_frames=bad_frames,
-            on_offload=offload,
-        )
+        if track:
+            tstate[cid] = apply_track_round(
+                s,
+                plan,
+                models=client.models,
+                stream=client.stream,
+                state=tstate[cid],
+                head=head[cid],
+                n_frames=n_frames,
+                horizon=horizon,
+                bad_frames=bad_frames,
+                retention=ret,
+                on_offload=offload,
+            )
+        else:
+            apply_round(
+                s,
+                plan,
+                models=client.models,
+                stream=client.stream,
+                head=head[cid],
+                n_frames=n_frames,
+                horizon=horizon,
+                bad_frames=bad_frames,
+                on_offload=offload,
+            )
         npu_busy_abs[cid] = t0 + plan.npu_busy_until
         head[cid] += horizon
 

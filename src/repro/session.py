@@ -51,6 +51,7 @@ from .core.profiles import PAPER_MODELS, ModelProfile, StreamSpec
 from .core.registry import PolicySpec, available_policies, get_policy
 from .core.schedule import StreamStats
 from .core.simulator import Trace, simulate, simulate_multi
+from .core.tracking import WorkloadSpec
 
 __all__ = [
     "FleetSpec",
@@ -61,6 +62,7 @@ __all__ = [
     "SweepPoint",
     "SweepReport",
     "TraceSpec",
+    "WorkloadSpec",
 ]
 
 _PRESET_MODELS: dict[str, ModelProfile] = {m.name: m for m in PAPER_MODELS}
@@ -92,9 +94,22 @@ class TraceSpec:
             object.__setattr__(self, "points", ())
         else:
             object.__setattr__(self, "mbps", 2.5)
-            object.__setattr__(
-                self, "points", tuple((float(t), float(v)) for t, v in self.points)
-            )
+            pts = tuple((float(t), float(v)) for t, v in self.points)
+            # Same validation as Trace.piecewise, surfaced at spec time (and
+            # as CLI exit 2) instead of as a nonsense lookup mid-simulation.
+            for (t0, _), (t1, _) in zip(pts, pts[1:]):
+                if t1 <= t0:
+                    raise ValueError(
+                        f"piecewise trace time points must be strictly "
+                        f"increasing, got t={t1!r} after t={t0!r}"
+                    )
+            for ts, v in pts:
+                if v < 0:
+                    raise ValueError(
+                        f"piecewise trace bandwidth must be >= 0 Mbps, "
+                        f"got {v!r} at t={ts!r}"
+                    )
+            object.__setattr__(self, "points", pts)
 
     def build(self) -> Trace:
         if self.kind == "piecewise":
@@ -102,12 +117,13 @@ class TraceSpec:
         return Trace.constant(self.mbps, rtt_ms=self.rtt_ms)
 
     def segments(self) -> tuple[tuple[float, float], ...]:
-        """Lower to sorted ``(t_start_s, bandwidth_bps)`` segments — the
-        batched engines' on-device trace representation (a constant trace
-        is one segment at t=0).  Mirrors ``Trace.piecewise``'s sort and
-        its bps conversion exactly."""
+        """Lower to ``(t_start_s, bandwidth_bps)`` segments — the batched
+        engines' on-device trace representation (a constant trace is one
+        segment at t=0).  Points are validated strictly increasing at
+        construction; this mirrors ``Trace.piecewise``'s bps conversion
+        exactly."""
         if self.kind == "piecewise":
-            return tuple((float(t), float(v) * 1e6) for t, v in sorted(self.points))
+            return tuple((float(t), float(v) * 1e6) for t, v in self.points)
         return ((0.0, float(self.mbps) * 1e6),)
 
     @property
@@ -248,6 +264,9 @@ class ScenarioSpec:
     ``models`` entries may be preset names (``"resnet-50"``/``"squeezenet"``)
     or full :class:`ModelProfile` objects; they normalize to profiles.
     ``fleet`` is only consulted by ``run_multi``; ``seed`` only by serving.
+    ``workload`` selects the frame semantics (classification by default,
+    detect+track with ``WorkloadSpec(kind="track")``) and must be one the
+    policy declares it can plan (``PolicyEntry.workloads``).
     """
 
     policy: PolicySpec
@@ -256,6 +275,7 @@ class ScenarioSpec:
     models: tuple[ModelProfile, ...] = ("resnet-50", "squeezenet")  # type: ignore[assignment]
     trace: TraceSpec = field(default_factory=TraceSpec)
     fleet: FleetSpec | None = None
+    workload: WorkloadSpec = field(default_factory=WorkloadSpec)
     strict: bool = True
     seed: int = 0
     label: str = ""
@@ -275,6 +295,17 @@ class ScenarioSpec:
         )
         if not self.models:
             raise ValueError("scenario needs at least one model")
+        if isinstance(self.workload, str):
+            object.__setattr__(self, "workload", WorkloadSpec(kind=self.workload))
+        elif isinstance(self.workload, Mapping):
+            object.__setattr__(self, "workload", WorkloadSpec.from_json(self.workload))
+        entry = get_policy(self.policy.name)
+        if self.workload.kind not in entry.workloads:
+            raise ValueError(
+                f"policy {self.policy.name!r} plans "
+                f"{'/'.join(entry.workloads)} workloads, not "
+                f"{self.workload.kind!r}"
+            )
 
     # -- serialization -----------------------------------------------------
     def to_json(self) -> dict[str, Any]:
@@ -289,6 +320,8 @@ class ScenarioSpec:
         }
         if self.fleet is not None:
             out["fleet"] = self.fleet.to_json()
+        if self.workload != WorkloadSpec():
+            out["workload"] = self.workload.to_json()
         if self.label:
             out["label"] = self.label
         return out
@@ -306,6 +339,11 @@ class ScenarioSpec:
             models=tuple(data.get("models") or ("resnet-50", "squeezenet")),
             trace=TraceSpec.from_json(data.get("trace") or {}),
             fleet=FleetSpec.from_json(data["fleet"]) if data.get("fleet") else None,
+            workload=(
+                WorkloadSpec.from_json(data["workload"])
+                if data.get("workload")
+                else WorkloadSpec()
+            ),
             strict=bool(data.get("strict", True)),
             seed=int(data.get("seed", 0)),
             label=str(data.get("label", "")),
@@ -615,6 +653,7 @@ class Session:
             spec.trace.build(),
             spec.n_frames,
             strict=spec.strict,
+            workload=spec.workload,
         )
         return RunReport("sim", spec, [stats], meta={"policy": spec.policy.name})
 
@@ -636,7 +675,13 @@ class Session:
             capacity=fleet.capacity,
             backlog_limit=fleet.backlog_limit,
         )
-        ms = simulate_multi(sched, spec.trace.build(), spec.n_frames, strict=spec.strict)
+        ms = simulate_multi(
+            sched,
+            spec.trace.build(),
+            spec.n_frames,
+            strict=spec.strict,
+            workload=spec.workload,
+        )
         return RunReport(
             "multi",
             spec,
@@ -658,6 +703,11 @@ class Session:
         finish times are recomputed at real bandwidth, so an optimistic
         estimate shows up as deadline misses, exactly as in deployment."""
         spec = self.spec
+        if spec.workload.is_track:
+            raise ValueError(
+                "mode 'online' does not execute the tracking workload yet; "
+                "use run_sim/run_multi/run_sweep"
+            )
         models = list(spec.models)
         stream = spec.stream
         trace = spec.trace.build()
@@ -728,6 +778,11 @@ class Session:
         """Stand up the real-model serving stack (launch/serve) for this
         scenario: trains/quantizes the classifier pair, profiles it live, and
         runs the controller over a synthetic labeled video."""
+        if self.spec.workload.is_track:
+            raise ValueError(
+                "mode 'serving' does not execute the tracking workload yet; "
+                "use run_sim/run_multi/run_sweep"
+            )
         from .launch.serve import run_scenario  # heavy deps; import lazily
 
         summary = run_scenario(self.spec)
@@ -863,6 +918,7 @@ class Session:
                 params=s.policy.resolved,
                 rtt=s.trace.rtt_s,
                 bw_segments=s.trace.segments(),
+                workload=s.workload,
             )
             for s in specs
         ]
@@ -898,6 +954,7 @@ class Session:
                 weights=s.fleet.weights,
                 priorities=s.fleet.priorities,
                 params=s.policy.resolved,
+                workload=s.workload,
             )
             for s in specs
         ]

@@ -17,6 +17,7 @@ from __future__ import annotations
 from repro.core import PolicySpec
 from repro.core.brute_force import exhaustive_best
 from repro.core.profiles import PAPER_MODELS, StreamSpec, network_mbps
+from repro.core.tracking import WorkloadSpec, exhaustive_track_best
 from repro.session import FleetSpec, ScenarioSpec, Session, SweepGrid, TraceSpec
 
 # Small discretized instance: 2 offload resolutions keep the exhaustive
@@ -105,4 +106,66 @@ def test_fleet_max_utility_clients_never_beat_oracle():
         opt = exhaustive_best(list(PAPER_MODELS), STREAM, net, N_FRAMES, alpha=alpha)
         for st in pt.streams:
             assert st.utility(alpha) <= opt + alpha * TOL, (pt.overrides, st, opt)
+    assert any(s.frames_processed > 0 for p in pts for s in p.streams)
+
+
+# ---------------------------------------------------------------------------
+# Tracking workload: ``tracking.exhaustive_track_best`` enumerates every
+# executor-accepted detect+track action (SKIP | NPU detection | offloaded
+# detection, each at ANY interval k <= k_max, with exact NPU occupancy
+# carry) — a superset of what the registered planners emit.  No tracking
+# heuristic, on any backend, can beat it.
+# ---------------------------------------------------------------------------
+
+TRACK_WL = WorkloadSpec("track", decay=0.3, density=1.0)
+TRACK_K_MAX = 3
+
+
+def _track_points(policy: str, params: dict, fleet=None):
+    spec = ScenarioSpec(
+        policy=PolicySpec(policy, params),
+        n_frames=N_FRAMES,
+        stream=STREAM,
+        trace=TraceSpec(mbps=BANDWIDTHS[0], rtt_ms=RTT_MS),
+        workload=TRACK_WL,
+        fleet=fleet,
+    )
+    rep = Session(spec).run_sweep(SweepGrid(bandwidth_mbps=BANDWIDTHS), backend="batched")
+    assert rep.backend == "batched"
+    assert rep.meta["engine"] == ("sim_multi_batch" if fleet else "sim_batch")
+    return rep.points
+
+
+def _track_oracle(mbps: float) -> float:
+    net = network_mbps(mbps, rtt_ms=RTT_MS)
+    return exhaustive_track_best(
+        list(PAPER_MODELS), STREAM, net, N_FRAMES,
+        retention=TRACK_WL.retention, k_max=TRACK_K_MAX,
+    )
+
+
+def test_batched_track_planners_never_beat_oracle():
+    for policy, params in (
+        ("track_accuracy", {"decay": 0.3, "k_max": TRACK_K_MAX}),
+        ("track_fixed", {"k": 2}),
+    ):
+        pts = _track_points(policy, params)
+        for pt in pts:
+            opt = _track_oracle(pt.overrides["bandwidth_mbps"])
+            assert pt.stats.accuracy_sum <= opt + TOL, (policy, pt.overrides, opt)
+        assert any(p.stats.frames_processed > 0 for p in pts)
+
+
+def test_fleet_track_clients_never_beat_oracle():
+    """Contention only removes options (detections share the uplink, the
+    server queue delays state refreshes), so the full-bandwidth
+    single-client oracle still bounds every per-client accuracy sum."""
+    pts = _track_points(
+        "track_accuracy", {"decay": 0.3, "k_max": TRACK_K_MAX},
+        fleet=FleetSpec(n_clients=2, capacity=2),
+    )
+    for pt in pts:
+        opt = _track_oracle(pt.overrides["bandwidth_mbps"])
+        for st in pt.streams:
+            assert st.accuracy_sum <= opt + TOL, (pt.overrides, st, opt)
     assert any(s.frames_processed > 0 for p in pts for s in p.streams)

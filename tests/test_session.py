@@ -24,6 +24,7 @@ from repro.core import (
     PolicySpec,
     StreamSpec,
     Trace,
+    WorkloadSpec,
     make_policy,
     profile_ms,
     simulate,
@@ -45,7 +46,13 @@ POLICY_PARAMS: dict[str, dict] = {
     "brute_force": {},
     "jax_accuracy": {},
     "jax_utility": {"alpha": 200.0},
+    "track_accuracy": {},
+    "track_fixed": {"k": 3},
 }
+
+# Policies that plan the detect+track workload — their golden runs carry a
+# tracking WorkloadSpec (the registry gate refuses the classify default).
+TRACK_POLICIES = frozenset({"track_accuracy", "track_fixed"})
 
 
 # ---------------------------------------------------------------------------
@@ -153,6 +160,42 @@ def test_policy_spec_hashable_and_trace_spec_normalizes():
     assert c.points == () and TraceSpec.from_json(c.to_json()) == c
 
 
+def test_piecewise_trace_validation_errors():
+    """Non-monotonic time points or negative bandwidth raise one-line
+    ``ValueError``s — at spec construction AND in ``Trace.piecewise``
+    itself, so malformed traces never become nonsense lookups
+    mid-simulation."""
+    for bad_points in (((0.0, 3.0), (0.0, 1.0)), ((0.5, 3.0), (0.2, 1.0))):
+        with pytest.raises(ValueError, match="strictly increasing"):
+            TraceSpec(kind="piecewise", points=bad_points)
+        with pytest.raises(ValueError, match="strictly increasing"):
+            Trace.piecewise(list(bad_points))
+    with pytest.raises(ValueError, match=">= 0 Mbps"):
+        TraceSpec(kind="piecewise", points=((0.0, 3.0), (1.0, -0.5)))
+    with pytest.raises(ValueError, match=">= 0 Mbps"):
+        Trace.piecewise([(0.0, -1.0)])
+    # ...and a zero-bandwidth (dead link) segment stays legal
+    assert TraceSpec(kind="piecewise", points=((0.0, 0.0),)).build().at(0.0)
+
+
+def test_session_cli_bad_trace_is_exit_2(tmp_path, capsys):
+    """A spec with a malformed piecewise trace exits 2 with a one-line
+    ``error: ...`` on stderr — the validation surfaces through the CLI,
+    never as a traceback."""
+    from repro.session import main
+
+    bad = tmp_path / "bad_trace.json"
+    bad.write_text(json.dumps({
+        "policy": {"name": "local"},
+        "trace": {"kind": "piecewise", "rtt_ms": 50.0,
+                  "points": [[0.0, 3.0], [0.0, 1.0]]},
+    }))
+    assert main([str(bad)]) == 2
+    err = capsys.readouterr().err
+    assert err.startswith("error:") and "strictly increasing" in err
+    assert "Traceback" not in err and err.strip().count("\n") == 0
+
+
 def test_scenario_spec_validation_errors():
     with pytest.raises(ValueError, match="unknown trace kind"):
         TraceSpec(kind="sinusoid")
@@ -178,16 +221,19 @@ GOLD_FRAMES = 24
 @pytest.mark.parametrize("name", sorted(POLICY_PARAMS))
 def test_run_sim_matches_legacy_simulate_exactly(name):
     params = POLICY_PARAMS[name]
+    workload = WorkloadSpec("track" if name in TRACK_POLICIES else "classify")
     legacy = simulate(
         make_policy(name, **params),
         list(PAPER_MODELS),
         PAPER_STREAM,
         Trace.constant(2.5),
         GOLD_FRAMES,
+        workload=workload,
     )
     report = Session(
         ScenarioSpec(
-            policy=PolicySpec(name, params), n_frames=GOLD_FRAMES, trace=TraceSpec(mbps=2.5)
+            policy=PolicySpec(name, params), n_frames=GOLD_FRAMES,
+            trace=TraceSpec(mbps=2.5), workload=workload,
         )
     ).run_sim()
     st = report.stats

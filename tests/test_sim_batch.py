@@ -91,10 +91,20 @@ def _acc_tol(name: str) -> float:
     return AUDIT_TOL if name in NET_POLICIES else 0.0
 
 
+# Detect+track planners are batched too, but plan a different workload
+# kind; their golden grids live in tests/test_tracking.py.
+TRACK_POLICIES = frozenset(
+    n for n in available_policies() if get_policy(n).workloads == ("track",)
+)
+
+
 def test_registry_flag_matches_backend_table():
     flagged = {n for n in available_policies() if get_policy(n).batched}
     assert set(batched_policies()) == flagged
-    assert set(BATCHED_PARAMS) == flagged  # new batched policies join the sweep
+    # new batched classify policies join this sweep; track ones join
+    # test_tracking.py's (TRACK_POLICIES is derived, so neither can hide)
+    assert set(BATCHED_PARAMS) | TRACK_POLICIES == flagged
+    assert not (set(BATCHED_PARAMS) & TRACK_POLICIES)
 
 
 @pytest.mark.slow

@@ -1,0 +1,80 @@
+"""Property tests for the tracking workload, on random inputs.
+
+The load-bearing invariant is staleness monotonicity: a tracked frame can
+never score more than a fresher one.  It is pinned twice —
+
+  * on the scoring tables every backend consumes (``retention_powers`` /
+    ``interval_means``; the planners' minimal-feasible-k reduction is only
+    correct because the interval mean is non-increasing);
+  * end-to-end through the reference executor: with a fixed plan sequence
+    (``track_fixed`` plans never read the workload truth), a faster-decaying
+    world can only lower the executed accuracy sum.
+"""
+from __future__ import annotations
+
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)"
+)
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+
+from repro.core import PolicySpec, StreamSpec, Trace, simulate  # noqa: E402
+from repro.core.audit import AUDIT_TOL  # noqa: E402
+from repro.core.profiles import PAPER_MODELS  # noqa: E402
+from repro.core.tracking import (  # noqa: E402
+    WorkloadSpec,
+    interval_means,
+    retention,
+    retention_powers,
+)
+
+# Example counts come from the shared profiles in conftest.py
+# (HYPOTHESIS_PROFILE=ci|nightly); settings() snapshots the active profile.
+SETTINGS = settings()
+
+MODELS = list(PAPER_MODELS)
+
+INT_FIELDS = (
+    "frames_processed",
+    "frames_missed_deadline",
+    "frames_offloaded",
+    "frames_total",
+    "schedule_calls",
+)
+
+
+@SETTINGS
+@given(
+    decay=st.floats(0.0, 1.0),
+    density=st.floats(0.0, 8.0),
+    det_acc=st.floats(0.0, 1.0),
+)
+def test_tracked_accuracy_monotone_in_staleness(decay, density, det_acc):
+    ret = retention(decay, density)
+    assert 0.0 <= ret <= 1.0
+    scores = [det_acc * p for p in retention_powers(ret, 32)]
+    assert all(a >= b for a, b in zip(scores, scores[1:]))
+    means = interval_means(ret, 16)
+    assert all(a >= b - 1e-15 for a, b in zip(means, means[1:]))
+
+
+@SETTINGS
+@given(decay=st.floats(0.0, 0.9), k=st.integers(1, 8))
+def test_executed_accuracy_monotone_in_decay(decay, k):
+    spec = PolicySpec("track_fixed", {"k": k})
+    trace = Trace.constant(4.0)
+    base = simulate(
+        spec.build(), MODELS, StreamSpec(), trace, 12,
+        workload=WorkloadSpec("track", decay=decay),
+    )
+    worse = simulate(
+        spec.build(), MODELS, StreamSpec(), trace, 12,
+        workload=WorkloadSpec("track", decay=min(decay + 0.1, 1.0)),
+    )
+    assert worse.accuracy_sum <= base.accuracy_sum + AUDIT_TOL
+    # ...and the decay curve only rescales scores — the audited plan
+    # execution (counts, misses, offloads) is identical.
+    for f in INT_FIELDS:
+        assert getattr(worse, f) == getattr(base, f)
