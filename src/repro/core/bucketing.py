@@ -1,0 +1,61 @@
+"""The shape-bucketing policy shared by every batched program.
+
+Both sweep engines (:mod:`repro.core.sim_batch`,
+:mod:`repro.core.sim_multi_batch`) compile one executable per *shape
+bucket*, not per scenario: every compiled dimension — the planning window
+``W``, the DP bin count ``NBINS``, trace-segment and frame-horizon pads —
+is first rounded UP through the quantizers below, and scenarios are padded
+to the bucket size.  Padding is provably inert (padded windows are gated
+off, padded bins are unreachable, padded segments carry ``+inf``
+sentinels), so bucketing can only change wall-clock and compile counts,
+never results.  The contract every quantizer obeys:
+
+* **never shrinks**: ``quant(n) >= n`` for all ``n >= 1``,
+* **monotone**: ``m <= n`` implies ``quant(m) <= quant(n)``, so a bigger
+  scenario can never land in a smaller bucket, and
+* **idempotent on its own outputs**: ``quant(quant(n)) == quant(n)`` —
+  bucket sizes are fixed points, so re-bucketing a padded group is a
+  no-op and near-identical sweeps hash to the same executable.
+
+These properties (hypothesis-tested in ``tests/test_bucketing.py``) are
+what make the persistent compilation cache effective: two sweeps whose
+shapes differ only within a bucket produce byte-identical jaxprs and hit
+the same cached executable, in-process (``lru_cache`` program factories)
+and on disk (``jax_compilation_cache_dir``).
+
+Why these particular ladders:
+
+* ``quant_w`` — planning windows concentrate in 1..128 (fps x deadline);
+  a dense-then-sparse ladder caps in-group padding waste at ~2x while
+  keeping the number of distinct compiled ``W`` small and stable.
+* ``quant_bins`` — DP bin grids are large (10^2..10^4) and cheap per bin;
+  a coarse linear quantum (128 for single-stream, 32 for fleet lanes)
+  bounds waste at one quantum.
+* ``quant_pow2`` — trace-segment counts and frame horizons are tiny;
+  powers of two give log-many buckets.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# Dense below 8, then spreading steps: the window ladder shared by every
+# planner program's compiled W dimension.
+W_LADDER = (1, 2, 3, 4, 5, 6, 7, 8, 10, 12, 14, 16, 20, 24, 28, 32, 40, 48, 64, 96, 128)
+
+
+def quant_w(n: int) -> int:
+    """Bucket a planning-window length onto the ladder (pow2 past 128)."""
+    for w in W_LADDER:
+        if n <= w:
+            return w
+    return int(2 ** np.ceil(np.log2(n)))
+
+
+def quant_bins(n: int, q: int = 128) -> int:
+    """Round a DP bin count up to a multiple of the quantum ``q``."""
+    return int(q * np.ceil(max(n, 1) / q))
+
+
+def quant_pow2(n: int) -> int:
+    """Round up to the next power of two (minimum 1)."""
+    return 1 << max(int(np.ceil(np.log2(max(n, 1)))), 0)

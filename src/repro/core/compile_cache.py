@@ -1,0 +1,109 @@
+"""Persistent compilation cache + compile-count instrumentation.
+
+The sweep engines' planner programs cost seconds to tens of seconds to
+compile and milliseconds to run; at 10^5-point scale the only tolerable
+cold start is one that *loads* executables instead of rebuilding them.
+:func:`enable_compile_cache` points jax's persistent compilation cache at
+a directory (opt-in: ``Session.run_sweep(compile_cache=...)``, the sweep
+CLI's ``--compile-cache``, or the ``REPRO_COMPILE_CACHE`` environment
+variable), with the size/time thresholds zeroed so every planner program
+is cached.  Combined with the bucketing policy (:mod:`.bucketing` — stable
+shapes => byte-identical jaxprs => identical cache keys), a re-run of any
+sweep on a warm directory skips XLA entirely.
+
+:class:`CompileCounter` counts what actually happened, via
+``jax.monitoring`` events:
+
+* ``backend_compiles`` — executable builds the backend was asked for
+  (``/jax/core/compile/backend_compile_duration``; fires on real compiles
+  AND on persistent-cache loads),
+* ``cache_misses`` / ``cache_hits`` — persistent-cache outcomes (these
+  events only fire when the cache is enabled).
+
+``compiles`` resolves the authoritative "XLA really ran" count from
+whichever signals are live, so benches and tests assert on one number.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+
+import jax
+import jax.monitoring
+from jax._src import compilation_cache as _compilation_cache
+from jax._src import monitoring as _monitoring
+
+_ENV_VAR = "REPRO_COMPILE_CACHE"
+
+
+def enable_compile_cache(cache_dir: str | os.PathLike) -> str:
+    """Enable jax's persistent compilation cache at ``cache_dir``.
+
+    Idempotent; creates the directory.  Thresholds are zeroed so even
+    fast-compiling programs persist (the default 1s floor would skip the
+    small shape buckets that dominate smoke grids).
+    """
+    path = os.fspath(cache_dir)
+    os.makedirs(path, exist_ok=True)
+    changed = jax.config.jax_compilation_cache_dir != path
+    jax.config.update("jax_compilation_cache_dir", path)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
+    # jax initializes the file cache lazily at the first compile; a compile
+    # before this call pins it *disabled* (config updates alone never
+    # re-initialize).  Reset so the next compile re-reads the config — the
+    # on-disk contents are untouched.
+    if changed or getattr(_compilation_cache, "_cache", None) is None:
+        _compilation_cache.reset_cache()
+    return path
+
+
+def default_cache_dir() -> str | None:
+    """The opt-in cache directory from the environment, if any."""
+    return os.environ.get(_ENV_VAR) or None
+
+
+@dataclass
+class CompileCounter:
+    """Context manager counting compiles/cache traffic within its scope."""
+
+    backend_compiles: int = 0
+    cache_misses: int = 0
+    cache_hits: int = 0
+    cache_requests: int = 0
+    _handles: list = field(default_factory=list, repr=False)
+
+    @property
+    def compiles(self) -> int:
+        """Executables XLA actually built (not served from the disk cache)."""
+        # With the persistent cache live, misses are authoritative (backend
+        # builds also fire on disk loads); without it the hit/miss events
+        # never fire and every backend build is real.  The request event is
+        # NOT a liveness signal — jax emits it even with the cache disabled.
+        if self.cache_misses or self.cache_hits:
+            return self.cache_misses
+        return self.backend_compiles
+
+    def __enter__(self) -> "CompileCounter":
+        def on_event(event: str, **kw) -> None:
+            if event == "/jax/compilation_cache/cache_misses":
+                self.cache_misses += 1
+            elif event == "/jax/compilation_cache/cache_hits":
+                self.cache_hits += 1
+            elif event == "/jax/compilation_cache/compile_requests_use_cache":
+                self.cache_requests += 1
+
+        def on_duration(event: str, duration: float, **kw) -> None:
+            if event == "/jax/core/compile/backend_compile_duration":
+                self.backend_compiles += 1
+
+        jax.monitoring.register_event_listener(on_event)
+        jax.monitoring.register_event_duration_secs_listener(on_duration)
+        self._handles = [on_event, on_duration]
+        return self
+
+    def __exit__(self, *exc) -> None:
+        on_event, on_duration = self._handles
+        _monitoring._unregister_event_listener_by_callback(on_event)
+        _monitoring._unregister_event_duration_listener_by_callback(on_duration)
+        self._handles = []

@@ -67,6 +67,9 @@ import numpy as np
 from jax.experimental import enable_x64
 
 from .audit import AUDIT_TOL
+from .bucketing import quant_bins as _quant_bins
+from .bucketing import quant_pow2 as _quant_pow2
+from .bucketing import quant_w as _quant_w
 from .jax_sched import (
     NEG,
     _accuracy_dp,
@@ -78,6 +81,7 @@ from .jax_sched import (
 from .profiles import ModelProfile, StreamSpec
 from .registry import get_policy
 from .schedule import StreamStats
+from .sweep_shard import LaneProgram
 from .tracking import WorkloadSpec, interval_means, retention, retention_powers
 
 __all__ = ["BatchScenario", "batched_policies", "simulate_batch"]
@@ -175,24 +179,14 @@ def _window_frames(stream: StreamSpec, params: Mapping[str, Any]) -> int:
 # Scenario grouping: one monolithic batch would force every lane to pay the
 # batch-max window, bin count, AND round count (a vmapped while_loop runs
 # until the deepest lane finishes).  Scenarios are instead partitioned into
-# shape-homogeneous groups keyed on a *quantized* window size (and the
-# Max-Accuracy bin count quantized to multiples of 128), which bounds
-# in-group padding waste by ~2x while keeping the jit cache small and stable
-# across sweeps.  Padding is provably inert (see module docstring), so the
-# partition cannot change any result — only wall-clock.
-
-_W_LADDER = (1, 2, 3, 4, 5, 6, 7, 8, 10, 12, 14, 16, 20, 24, 28, 32, 40, 48, 64, 96, 128)
-
-
-def _quant_w(n: int) -> int:
-    for w in _W_LADDER:
-        if n <= w:
-            return w
-    return int(2 ** np.ceil(np.log2(n)))
-
-
-def _quant_bins(n: int, q: int = 128) -> int:
-    return int(q * np.ceil(max(n, 1) / q))
+# shape-homogeneous groups keyed on *quantized* shapes — the shared
+# bucketing policy lives in :mod:`repro.core.bucketing` (window ladder, bin
+# quanta, pow2 pads; never-shrink/monotone/idempotent, hypothesis-tested) —
+# which bounds in-group padding waste by ~2x while keeping the jit cache
+# small and stable across sweeps AND making repeated sweeps hit the
+# persistent compilation cache (see repro.core.compile_cache).  Padding is
+# provably inert (see module docstring), so the partition cannot change any
+# result — only wall-clock.
 
 
 def _stitch(scenarios, key_fn, run_group) -> list[StreamStats]:
@@ -375,9 +369,7 @@ def _accuracy_program(W: int, NBINS: int, J: int, strict: bool):
         out = jax.lax.while_loop(cond, body, init)
         return out[2], out[3], out[4], out[5], out[6]
 
-    return jax.jit(jax.vmap(
-        one, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, None, None)
-    ))
+    return LaneProgram(one, (0,) * 11 + (None,) * 2)
 
 
 @_planner("jax_accuracy")
@@ -470,9 +462,7 @@ def _utility_program(W: int, width: int, J: int, strict: bool):
         out = jax.lax.while_loop(cond, body, init)
         return out[2], out[3], out[4], out[5], out[6]
 
-    return jax.jit(jax.vmap(
-        one, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0, 0, None, None, None)
-    ))
+    return LaneProgram(one, (0,) * 10 + (None,) * 3)
 
 
 @_planner("jax_utility")
@@ -525,10 +515,6 @@ def _run_utility(models, scenarios, strict):
 # flag reports a front outgrew it — exactness is never traded for speed.
 _UTIL_CAP = 256
 _UTIL_FAST_WIDTH = 64
-
-
-def _quant_pow2(n: int) -> int:
-    return 1 << max(int(np.ceil(np.log2(max(n, 1)))), 0)
 
 
 def _trace_bw(bw_t: jax.Array, bw_v: jax.Array, t: jax.Array) -> jax.Array:
@@ -724,7 +710,7 @@ def _max_accuracy_program(W: int, NBINS: int, S: int, J: int, R: int, strict: bo
         out = jax.lax.while_loop(cond, body, init)
         return out[2], out[3], out[4], out[6], out[7], out[5]
 
-    return jax.jit(jax.vmap(one, in_axes=(0,) * 17 + (None,) * 3))
+    return LaneProgram(one, (0,) * 17 + (None,) * 3)
 
 
 @_planner("max_accuracy")
@@ -876,7 +862,7 @@ def _track_program(S: int, J: int, R: int, KQ: int, A: int, strict: bool, fixed:
         out = jax.lax.while_loop(cond, body, init)
         return out[4], out[5], out[6], out[8], out[9], out[7]
 
-    return jax.jit(jax.vmap(one, in_axes=(0,) * 12 + (None,) * 2))
+    return LaneProgram(one, (0,) * 12 + (None,) * 2)
 
 
 def _run_track(models, scenarios, strict, *, fixed: bool):
@@ -1065,7 +1051,7 @@ def _max_utility_program(W: int, S: int, J: int, R: int, strict: bool, width: in
         out = jax.lax.while_loop(cond, body, init)
         return out[2], out[3], out[4], out[6], out[7], out[5], out[8]
 
-    return jax.jit(jax.vmap(one, in_axes=(0,) * 13 + (None,) * 3))
+    return LaneProgram(one, (0,) * 13 + (None,) * 3)
 
 
 @_planner("max_utility")

@@ -97,6 +97,8 @@ from .jax_sched import (
     _utility_dp,
     _utility_dp64,
 )
+from .bucketing import quant_bins as _quant_bins
+from .bucketing import quant_w as _quant_w
 from .profiles import ModelProfile, StreamSpec
 from .registry import get_policy
 from .schedule import StreamStats
@@ -107,12 +109,11 @@ from .sim_batch import (
     _audit_scan,
     _collect,
     _common,
-    _quant_bins,
-    _quant_w,
     _trace_bw,
     _window_frames,
     segment_arrays,
 )
+from .sweep_shard import LaneProgram
 from .simulator import _BITS_EPS, _EPS, MultiStreamStats
 from .tracking import WorkloadSpec, interval_means, retention, retention_powers
 
@@ -644,9 +645,7 @@ def _fleet_program(alloc: str, N: int, K: int, F: int, J: int, R: int, S: int):
         st = phys.finish(st)
         return st.accs, st.proc, st.miss, st.grants, st.denials, st.sjobs, st.sbusy
 
-    return jax.jit(
-        jax.vmap(one, in_axes=(0,) * 14 + (None,) * 3)
-    )
+    return LaneProgram(one, (0,) * 14 + (None,) * 3)
 
 
 # ---------------------------------------------------------------------------
@@ -880,7 +879,7 @@ def _acc_fleet_program(alloc: str, N: int, K: int, F: int, W: int, NBINS: int,
         return (st.accs, st.proc, st.miss, st.offl, st.rounds, st.npus,
                 st.grants, st.denials, st.sjobs, st.sbusy)
 
-    return jax.jit(jax.vmap(one, in_axes=(0,) * 20 + (None,) * 5))
+    return LaneProgram(one, (0,) * 20 + (None,) * 5)
 
 
 @lru_cache(maxsize=None)
@@ -1052,7 +1051,7 @@ def _util_fleet_program(alloc: str, N: int, K: int, F: int, W: int, S: int,
         return (st.accs, st.proc, st.miss, st.offl, st.rounds, st.npus,
                 st.grants, st.denials, st.sjobs, st.sbusy, ovf)
 
-    return jax.jit(jax.vmap(one, in_axes=(0,) * 16 + (None,) * 5))
+    return LaneProgram(one, (0,) * 16 + (None,) * 5)
 
 
 # ---------------------------------------------------------------------------
@@ -1138,9 +1137,7 @@ def _jax_acc_fleet_program(W: int, NBINS: int, S: int, J: int, strict: bool):
         out = jax.lax.while_loop(cond, body, init)
         return out[2], out[3], out[4], out[5], out[6], out[7], out[8]
 
-    return jax.jit(jax.vmap(
-        one, in_axes=(0,) * 17 + (None,) * 2
-    ))
+    return LaneProgram(one, (0,) * 17 + (None,) * 2)
 
 
 @lru_cache(maxsize=None)
@@ -1204,9 +1201,7 @@ def _jax_util_fleet_program(W: int, width: int, S: int, J: int, strict: bool):
         out = jax.lax.while_loop(cond, body, init)
         return out[2], out[3], out[4], out[5], out[6], out[7], out[8]
 
-    return jax.jit(jax.vmap(
-        one, in_axes=(0,) * 16 + (None,) * 3
-    ))
+    return LaneProgram(one, (0,) * 16 + (None,) * 3)
 
 
 # ---------------------------------------------------------------------------
@@ -1834,7 +1829,7 @@ def _track_fleet_program(alloc: str, N: int, K: int, F: int, KQ: int, S: int,
         return (st.accs, st.proc, st.miss, st.offl, st.rounds, st.npus,
                 st.grants, st.denials, st.sjobs, st.sbusy)
 
-    return jax.jit(jax.vmap(one, in_axes=(0,) * 15 + (None,) * 4))
+    return LaneProgram(one, (0,) * 15 + (None,) * 4)
 
 
 def _run_track_fleet(models, scenarios, strict, *, fixed: bool):

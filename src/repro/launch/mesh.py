@@ -4,6 +4,8 @@ while the dry-run sees 512 (XLA_FLAGS set by dryrun.py before any import).
 """
 from __future__ import annotations
 
+from functools import lru_cache
+
 import jax
 from jax.sharding import Mesh
 
@@ -28,3 +30,16 @@ def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0) -> Mesh:
     if pod:
         return _mesh((pod, data, model), ("pod", "data", "model"))
     return _mesh((data, model), ("data", "model"))
+
+
+@lru_cache(maxsize=None)
+def make_sweep_mesh() -> Mesh:
+    """1-D mesh over every local device, for scenario-parallel sweep groups.
+
+    The sweep engines shard only the scenario (lane) axis — planner programs
+    are embarrassingly parallel across lanes, so a flat mesh uses every
+    device with zero cross-device traffic.  Cached: the device topology is
+    fixed for the life of the process, and callers key compiled sharded
+    programs on this mesh object.
+    """
+    return _mesh((jax.device_count(),), ("scenario",))

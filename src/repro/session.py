@@ -45,6 +45,7 @@ from typing import Any, Iterator, Mapping, Sequence
 
 from .core import sim_batch, sim_multi_batch
 from .core.audit import AUDIT_TOL, apply_round, audit_round
+from .core.compile_cache import default_cache_dir, enable_compile_cache
 from .core.controller import BandwidthEstimator, OnlineController
 from .core.edge_server import ALLOCATION_POLICIES, EdgeServerScheduler, make_fleet
 from .core.profiles import PAPER_MODELS, ModelProfile, StreamSpec
@@ -61,6 +62,7 @@ __all__ = [
     "SweepGrid",
     "SweepPoint",
     "SweepReport",
+    "SweepSummary",
     "TraceSpec",
     "WorkloadSpec",
 ]
@@ -450,16 +452,21 @@ class SweepGrid:
         out.extend(self.params.items())
         return out
 
-    def points(self) -> list[dict[str, Any]]:
-        """Every grid point as an override dict, in row-major axis order."""
+    def iter_points(self) -> Iterator[dict[str, Any]]:
+        """Lazily yield every grid point as an override dict, in row-major
+        axis order — the streaming twin of :meth:`points` for grids too
+        large to materialize on the host at once."""
         axes = self.axes()
         if not axes:
-            return [{}]
+            yield {}
+            return
         names = [n for n, _ in axes]
-        return [
-            dict(zip(names, combo))
-            for combo in itertools.product(*(vals for _, vals in axes))
-        ]
+        for combo in itertools.product(*(vals for _, vals in axes)):
+            yield dict(zip(names, combo))
+
+    def points(self) -> list[dict[str, Any]]:
+        """Every grid point as an override dict, in row-major axis order."""
+        return list(self.iter_points())
 
     def __len__(self) -> int:
         n = 1
@@ -578,11 +585,69 @@ class SweepPoint:
 
 
 @dataclass
+class SweepSummary:
+    """Streaming reduction of a sweep's per-point stats.
+
+    ``run_sweep`` folds each executed chunk into one of these, so a
+    10^5+-point grid can report aggregate frames/accuracy/miss extremes
+    without ever materializing every :class:`SweepPoint` on the host
+    (``keep_points=False``).  Attached to ``SweepReport.meta["summary"]``
+    as plain JSON whenever the sweep ran chunked or point-free."""
+
+    n_points: int = 0
+    n_streams: int = 0
+    frames_total: int = 0
+    frames_processed: int = 0
+    frames_missed_deadline: int = 0
+    frames_offloaded: int = 0
+    accuracy_sum: float = 0.0
+    best_accuracy: float = 0.0
+    best_point: dict[str, Any] | None = None
+    max_miss_rate: float = 0.0
+    worst_point: dict[str, Any] | None = None
+
+    def update(self, point: SweepPoint) -> None:
+        self.n_points += 1
+        self.n_streams += len(point.streams)
+        for s in point.streams:
+            self.frames_total += s.frames_total
+            self.frames_processed += s.frames_processed
+            self.frames_missed_deadline += s.frames_missed_deadline
+            self.frames_offloaded += s.frames_offloaded
+            self.accuracy_sum += s.accuracy_sum
+        acc = point.aggregate_accuracy
+        if self.best_point is None or acc > self.best_accuracy:
+            self.best_accuracy, self.best_point = acc, dict(point.overrides)
+        miss = point.max_miss_rate
+        if self.worst_point is None or miss > self.max_miss_rate:
+            self.max_miss_rate, self.worst_point = miss, dict(point.overrides)
+
+    @property
+    def mean_accuracy(self) -> float:
+        return self.accuracy_sum / self.frames_total if self.frames_total else 0.0
+
+    def to_json(self) -> dict[str, Any]:
+        out = dataclasses.asdict(self)
+        out["mean_accuracy"] = self.mean_accuracy
+        return out
+
+    @staticmethod
+    def from_json(data: Mapping[str, Any]) -> "SweepSummary":
+        fields = {f.name for f in dataclasses.fields(SweepSummary)}
+        return SweepSummary(**{k: v for k, v in data.items() if k in fields})
+
+
+@dataclass
 class SweepReport:
     """What ``Session.run_sweep`` returns: the base spec, the grid, which
     engine actually ran (``backend``), and one :class:`SweepPoint` per grid
     point in ``grid.points()`` order.  ``to_json``/``from_json`` round-trip
-    losslessly (property-tested), so a sweep is a replayable artifact."""
+    losslessly (property-tested), so a sweep is a replayable artifact.
+
+    Chunked/streamed sweeps (``chunk_size=``/``keep_points=False``) carry
+    their incremental :class:`SweepSummary` in ``meta["summary"]``; with
+    ``keep_points=False`` the summary is the whole artifact and ``points``
+    is empty."""
 
     base: ScenarioSpec
     grid: SweepGrid
@@ -801,7 +866,15 @@ class Session:
     # -- mode: a whole scenario grid in one call ---------------------------
     BACKENDS = ("auto", "reference", "batched")
 
-    def run_sweep(self, grid: SweepGrid, *, backend: str = "auto") -> SweepReport:
+    def run_sweep(
+        self,
+        grid: SweepGrid,
+        *,
+        backend: str = "auto",
+        chunk_size: int | None = None,
+        keep_points: bool = True,
+        compile_cache: str | None = None,
+    ) -> SweepReport:
         """Run the base scenario across every point of ``grid``.
 
         Backend routing: single-stream grids of policies registered
@@ -819,60 +892,110 @@ class Session:
         a policy/grid combination without a vectorized engine logs a
         warning and falls back to the reference loop — never a silent
         wrong answer.
+
+        Scale-out knobs (docs/simulation.md "Scaling sweeps"):
+
+        * ``chunk_size`` — plan the grid as a lazy iterator of shape-grouped
+          chunks instead of materializing every spec upfront.  Chunking is
+          result-invariant (the engines' shape buckets are per-scenario and
+          padding is inert, so a chunked sweep is bit-identical to the
+          unchunked one — golden-tested), and each chunk's stats fold into
+          an incremental :class:`SweepSummary` in ``meta["summary"]``.
+        * ``keep_points=False`` — drop per-point results after folding them
+          into the summary, so a 10^5–10^6-point grid never lands on the
+          host at once.
+        * ``compile_cache`` — enable jax's persistent compilation cache at
+          this directory (defaults to ``$REPRO_COMPILE_CACHE`` when set),
+          so re-runs load planner executables instead of recompiling.
         """
         if backend not in self.BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; want one of {self.BACKENDS}")
+        if chunk_size is not None and int(chunk_size) < 1:
+            raise ValueError(f"chunk_size must be a positive int, got {chunk_size!r}")
+        cache_dir = compile_cache if compile_cache is not None else default_cache_dir()
+        if cache_dir:
+            enable_compile_cache(cache_dir)
         entry = get_policy(self.spec.policy.name)
-        pts = grid.points()
-        specs = [_apply_point(self.spec, p) for p in pts]
+        n_points = len(grid)
+        chunk = n_points if chunk_size is None else int(chunk_size)
         # A bandwidth_mbps axis *replaces* the base trace; on a piecewise
         # base that silently discards the time-varying profile — surface it
         # (logged once, recorded per point below) instead of staying mute.
-        clobbered = [
-            "bandwidth_mbps" in p and self.spec.trace.kind == "piecewise" for p in pts
-        ]
-        if any(clobbered):
+        # The axis applies to every point or none, so this is grid-uniform.
+        clobbers = bool(grid.bandwidth_mbps) and self.spec.trace.kind == "piecewise"
+        if clobbers:
             _LOG.warning(
                 "sweep axis 'bandwidth_mbps' replaces the piecewise base trace "
                 "with a constant trace at %d grid point(s); drop the axis (or "
                 "use a constant base trace) if the time-varying profile matters",
-                sum(clobbered),
+                n_points,
             )
-        meta: dict[str, Any] = {"requested_backend": backend, "grid_points": len(pts)}
-        capable, why = self._batched_capability(entry, specs)
-        use_batched = capable if backend == "auto" else backend == "batched"
-        if use_batched and not capable:
-            _LOG.warning(
-                "%s; run_sweep falling back to the reference loop "
-                "(batched policies: %s; batched fleet policies: %s)",
-                why,
-                sim_batch.batched_policies(),
-                sim_multi_batch.multi_batched_policies(),
-            )
-            meta["fallback"] = why
-            use_batched = False
+        meta: dict[str, Any] = {"requested_backend": backend, "grid_points": n_points}
+        if cache_dir:
+            meta["compile_cache"] = str(cache_dir)
+        streaming = chunk_size is not None or not keep_points
+        summary = SweepSummary() if streaming else None
+        out_points: list[SweepPoint] = []
+        use_batched: bool | None = None  # decided on the first chunk
         t0 = time.perf_counter()
-        if use_batched:
-            if any(s.fleet is not None for s in specs):
-                meta["engine"] = "sim_multi_batch"
-                points = self._sweep_batched_multi(specs, pts)
+        it = grid.iter_points()
+        n_chunks = 0
+        while True:
+            pts = list(itertools.islice(it, chunk))
+            if not pts:
+                break
+            n_chunks += 1
+            specs = [_apply_point(self.spec, p) for p in pts]
+            if use_batched is None:
+                capable, why = self._batched_capability(entry, specs)
+                use_batched = capable if backend == "auto" else backend == "batched"
+                if use_batched and not capable:
+                    _LOG.warning(
+                        "%s; run_sweep falling back to the reference loop "
+                        "(batched policies: %s; batched fleet policies: %s)",
+                        why,
+                        sim_batch.batched_policies(),
+                        sim_multi_batch.multi_batched_policies(),
+                    )
+                    meta["fallback"] = why
+                    use_batched = False
+                if use_batched:
+                    meta["engine"] = (
+                        "sim_multi_batch"
+                        if any(s.fleet is not None for s in specs)
+                        else "sim_batch"
+                    )
+            if use_batched:
+                if meta["engine"] == "sim_multi_batch":
+                    points = self._sweep_batched_multi(specs, pts)
+                else:
+                    points = self._sweep_batched(specs, pts)
             else:
-                meta["engine"] = "sim_batch"
-                points = self._sweep_batched(specs, pts)
-        else:
-            points = [self._sweep_reference(s, p) for s, p in zip(specs, pts)]
-        for hit, point in zip(clobbered, points):
-            if hit:
-                point.meta["trace_override"] = (
-                    "bandwidth_mbps axis replaced the piecewise base trace "
-                    "with a constant trace"
-                )
+                points = [self._sweep_reference(s, p) for s, p in zip(specs, pts)]
+            if clobbers:
+                for point in points:
+                    point.meta["trace_override"] = (
+                        "bandwidth_mbps axis replaced the piecewise base trace "
+                        "with a constant trace"
+                    )
+            if summary is not None:
+                for point in points:
+                    summary.update(point)
+            if keep_points:
+                out_points.extend(points)
         meta["wall_s"] = time.perf_counter() - t0
+        if chunk_size is not None:
+            meta["chunks"] = n_chunks
+            meta["chunk_size"] = chunk
+        if summary is not None:
+            meta["summary"] = summary.to_json()
+        if not keep_points:
+            meta["points_streamed"] = n_points
         return SweepReport(
             base=self.spec,
             grid=grid,
             backend="batched" if use_batched else "reference",
-            points=points,
+            points=out_points,
             meta=meta,
         )
 
@@ -1016,6 +1139,15 @@ def _sweep_main(argv: Sequence[str]) -> int:
     ap.add_argument("--grid", help="path to SweepGrid JSON (see --example-grid)")
     ap.add_argument("--backend", default="auto", choices=Session.BACKENDS)
     ap.add_argument("--out", help="write the SweepReport JSON here; print a summary instead")
+    ap.add_argument("--chunk-size", type=int, default=None, metavar="N",
+                    help="stream the grid in chunks of N points (bit-identical "
+                    "to unchunked; adds an incremental summary to meta)")
+    ap.add_argument("--summary-only", action="store_true",
+                    help="drop per-point stats, keep only the streaming summary "
+                    "(for 10^5+-point grids)")
+    ap.add_argument("--compile-cache", metavar="DIR",
+                    help="persist compiled programs under DIR (jax persistent "
+                    "compilation cache; re-runs skip XLA)")
     ap.add_argument("--example-grid", action="store_true",
                     help="print an example grid JSON and exit")
     args = ap.parse_args(argv)
@@ -1028,7 +1160,13 @@ def _sweep_main(argv: Sequence[str]) -> int:
     try:
         spec = ScenarioSpec.from_json(_read(args.spec))
         grid = SweepGrid.from_json(_read(args.grid))
-        report = Session(spec).run_sweep(grid, backend=args.backend)
+        report = Session(spec).run_sweep(
+            grid,
+            backend=args.backend,
+            chunk_size=args.chunk_size,
+            keep_points=not args.summary_only,
+            compile_cache=args.compile_cache,
+        )
         payload = json.dumps(report.to_json(), indent=2)
         if args.out:
             with open(args.out, "w") as fh:

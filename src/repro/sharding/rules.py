@@ -58,6 +58,22 @@ def serve_rules(mesh: Mesh) -> dict[str, Any]:
     return r
 
 
+def sweep_rules(mesh: Mesh) -> dict[str, Any]:
+    """Scenario-grid sweeps: one logical axis, the (padded) lane batch.
+
+    On the dedicated sweep mesh this is the ``scenario`` axis; on a
+    production mesh the lane batch spans the pure-DP batch axes instead, so
+    the same rule table serves both topologies.  The divisibility guard in
+    :meth:`MeshRules._resolve` is the enforcement point for the engines'
+    padding invariant — an unpadded lane count that does not divide the
+    mesh resolves to replicated, never to a wrong shard.
+    """
+    b = batch_axes(mesh)
+    if "scenario" in mesh.axis_names:
+        b = b + ("scenario",)
+    return {"scenario": b}
+
+
 @dataclasses.dataclass(frozen=True)
 class MeshRules:
     mesh: Mesh

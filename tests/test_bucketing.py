@@ -1,0 +1,127 @@
+"""The shape-bucketing policy contract (repro/core/bucketing.py).
+
+Every quantizer the batched engines compile against must (a) never shrink,
+(b) be monotone, and (c) be idempotent on its own outputs — together these
+guarantee padding is always an over-approximation, bigger scenarios never
+land in smaller buckets, and bucket sizes are fixed points so repeated
+sweeps hash to the same executables.  The properties run exhaustively over
+a dense range everywhere, and as hypothesis properties over 1..10^6 where
+hypothesis is installed (CI).  The executable-reuse regression at the
+bottom closes the loop: two sweeps differing only *within* one bucket must
+not trigger a single new XLA compile.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.core.bucketing import W_LADDER, quant_bins, quant_pow2, quant_w
+
+QUANTIZERS = {
+    "quant_w": quant_w,
+    "quant_bins": quant_bins,
+    "quant_bins_q32": lambda n: quant_bins(n, 32),
+    "quant_pow2": quant_pow2,
+}
+
+# Exhaustive over the dense operating range (every window/horizon the
+# engines see in practice), plus spot checks far past it.
+DENSE = list(range(1, 2049)) + [10_000, 65_537, 1_000_000]
+
+
+@pytest.mark.parametrize("name", sorted(QUANTIZERS))
+def test_never_shrinks_and_idempotent_dense(name):
+    q = QUANTIZERS[name]
+    for n in DENSE:
+        qn = q(n)
+        assert qn >= n, (name, n)
+        assert q(qn) == qn, (name, n)
+
+
+@pytest.mark.parametrize("name", sorted(QUANTIZERS))
+def test_monotone_dense(name):
+    q = QUANTIZERS[name]
+    prev = 0
+    for n in range(1, 2049):
+        qn = q(n)
+        assert qn >= prev, (name, n)
+        prev = qn
+    assert q(10_000) >= prev
+
+
+try:  # hypothesis widens the range in CI; the dense tests always run
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    ns = st.integers(min_value=1, max_value=1_000_000)
+
+    @pytest.mark.parametrize("name", sorted(QUANTIZERS))
+    @settings()
+    @given(n=ns)
+    def test_never_shrinks_property(name, n):
+        assert QUANTIZERS[name](n) >= n
+
+    @pytest.mark.parametrize("name", sorted(QUANTIZERS))
+    @settings()
+    @given(n=ns)
+    def test_idempotent_property(name, n):
+        q = QUANTIZERS[name]
+        assert q(q(n)) == q(n)
+
+    @pytest.mark.parametrize("name", sorted(QUANTIZERS))
+    @settings()
+    @given(m=ns, n=ns)
+    def test_monotone_property(name, m, n):
+        q = QUANTIZERS[name]
+        lo, hi = sorted((m, n))
+        assert q(lo) <= q(hi)
+
+except ImportError:
+    pass
+
+
+def test_ladder_values_are_fixed_points():
+    for w in W_LADDER:
+        assert quant_w(w) == w
+    assert quant_bins(128) == 128 and quant_bins(129) == 256
+    assert quant_bins(32, 32) == 32 and quant_bins(33, 32) == 64
+    assert quant_pow2(1) == 1 and quant_pow2(5) == 8
+
+
+def test_engines_share_the_bucketing_module():
+    """Both engines must quantize through the one documented policy, not
+    private copies — the aliases are the module's functions themselves."""
+    from repro.core import sim_batch, sim_multi_batch
+
+    assert sim_batch._quant_w is quant_w
+    assert sim_batch._quant_bins is quant_bins
+    assert sim_batch._quant_pow2 is quant_pow2
+    assert sim_multi_batch._quant_w is quant_w
+    assert sim_multi_batch._quant_bins is quant_bins
+
+
+def test_same_bucket_sweeps_reuse_executable():
+    """Two sweeps whose shapes differ only within one bucket (deadline 150
+    vs 152 ms: same quantized window, same quantized bin count) must reuse
+    the compiled executable — zero new XLA compiles on the second run,
+    counted via jax's own monitoring events."""
+    from repro.core import sim_batch
+    from repro.core.compile_cache import CompileCounter
+    from repro.core.registry import PolicySpec
+    from repro.session import ScenarioSpec, Session, SweepGrid
+
+    spec = ScenarioSpec(policy=PolicySpec("jax_accuracy"), n_frames=10)
+    with CompileCounter():
+        warm = Session(spec).run_sweep(
+            SweepGrid(deadline_ms=(150.0,), fps=(30.0,)), backend="batched"
+        )
+    assert warm.backend == "batched"
+    factory_size = sim_batch._accuracy_program.cache_info().currsize
+    with CompileCounter() as c2:
+        rerun = Session(spec).run_sweep(
+            SweepGrid(deadline_ms=(152.0,), fps=(30.0,)), backend="batched"
+        )
+    assert rerun.backend == "batched"
+    assert rerun.points[0].stats.frames_processed > 0
+    # same bucket => same program factory key => same jitted executable
+    assert sim_batch._accuracy_program.cache_info().currsize == factory_size
+    assert c2.backend_compiles == 0 and c2.compiles == 0
