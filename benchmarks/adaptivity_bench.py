@@ -1,66 +1,223 @@
-"""Beyond-paper benchmark: time-VARYING bandwidth (the paper holds B constant
-per run).  A WiFi-like square-wave trace alternates 3.5 <-> 0.8 Mbps; the
-online controller must ride through the drops.
+"""Online-adaptation engine benchmark: reference loop vs batched backend.
 
-derived = mean accuracy.  Rows compare the oracle-B policies (``run_sim``:
-the policy sees the true trace) against the same policy driven through
-``Session.run_online`` — the EWMA ``BandwidthEstimator`` fed only by observed
-uploads and audited against the true trace, i.e. the deployable configuration.
+The paper's §VI adaptivity story — observe the network, replan against the
+EWMA belief, execute against the truth — used to run one Python round at a
+time (``Session.run_online``).  This ladder drives the same grids through
+``run_sweep(mode="online")`` on both backends at {10, 100, 1000} points over
+the scenario-generator's mobility square wave (3.5 <-> 0.8 Mbps: the
+estimator has to ride through every collapse), and asserts the certified
+equivalence contract *in-bench* on every cell:
+
+  * integer stats (processed / missed / offloaded / total / rounds) exact,
+  * accuracy sums within ``AUDIT_TOL``,
+  * the final believed bandwidth (``estimated_bps``) bit-for-bit — the
+    batched EWMA chain is guarded against XLA fma/reassociation rewrites,
+    and this is the gate that proves the guards hold.
+
+The speedup is worthless if any of that fails, so ``main`` exits nonzero on
+the first disagreement.  **Acceptance bar: >= 5x warm at the 1000-point
+Max-Accuracy grid** (the reference pays ~17 Python DP planning rounds per
+point; the batched engine runs every lane's whole observe->replan->execute
+loop in one jitted while_loop).  The Max-Utility cells are gated on
+equivalence only: as in the fleet bench's network ladder, that planner's
+reference is a cheap numpy argmax while its batched round carries the
+width-64 beam, so on a small-CPU host it roughly breaks even — the recorded
+``speedup_warm`` is the honest number, tracked for parallel hardware where
+the lanes are free.
+
+Also kept: the oracle-vs-estimated accuracy rows (``adapt/...`` — the
+original beyond-paper comparison of a policy that sees the true trace
+against the deployable estimator-driven configuration).
+
+Results land in ``BENCH_adaptivity.json`` so CI can track the trajectory:
+
+    PYTHONPATH=src python benchmarks/adaptivity_bench.py           # full ladder
+    PYTHONPATH=src python benchmarks/adaptivity_bench.py --smoke   # 10-point cells
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
+import jax  # noqa: E402
+
 from repro.core import PolicySpec  # noqa: E402
-from repro.session import ScenarioSpec, Session, TraceSpec  # noqa: E402
+from repro.core import sim_batch, sim_online_batch, sweep_shard  # noqa: E402
+from repro.core.audit import AUDIT_TOL  # noqa: E402
+from repro.core.compile_cache import CompileCounter  # noqa: E402
+from repro.scenariogen import make_trace  # noqa: E402
+from repro.session import ScenarioSpec, Session, SweepGrid  # noqa: E402
 
-N_FRAMES = 240
-SMOKE_FRAMES = 60
+try:  # run.py imports this module as benchmarks.adaptivity_bench
+    from benchmarks.sweep_bench import _RssSampler
+except ImportError:  # direct `python benchmarks/adaptivity_bench.py`
+    from sweep_bench import _RssSampler
 
-# WiFi-like square wave, 2 s period: points repeat far past the trace length.
-_SQUARE = TraceSpec(
-    kind="piecewise",
-    rtt_ms=100.0,
-    points=tuple(
-        (float(t), 3.5 if i % 2 == 0 else 0.8) for i, t in enumerate(range(0, 14, 2))
-    ),
-)
+N_FRAMES = 60  # 2 s of the square wave: spans a full collapse + recovery
+POLICIES = (("max_accuracy", {"grid": 0.01}), ("max_utility", {"alpha": 200.0}))
+SIZES = (10, 100, 1000)
+DEFAULT_OUT = "BENCH_adaptivity.json"
+
+# Walking in/out of coverage (scenariogen catalog defaults): 3.5 Mbps for
+# one second out of every two, 0.8 Mbps otherwise.
+_SQUARE = make_trace("mobility_square")
+
+# One W shape bucket at 30 fps ([200, 233) ms), so every ladder size scales
+# the lane count of the *same* compiled program — the rtt axis stretches.
+_DEADLINES = (200.0, 208.0, 216.0, 224.0, 232.0)
 
 
-def _spec(policy: str, n_frames: int = N_FRAMES) -> ScenarioSpec:
-    return ScenarioSpec(
-        policy=PolicySpec(policy), n_frames=n_frames, trace=_SQUARE, label="adaptivity"
+def make_online_grid(size: int) -> SweepGrid:
+    """deadline (5, one shape bucket) x rtt (size/5) online points."""
+    n_rtt, rem = divmod(size, len(_DEADLINES))
+    if rem or n_rtt < 1:
+        raise ValueError(f"grid size must be a positive multiple of 5, got {size}")
+    return SweepGrid(
+        deadline_ms=_DEADLINES,
+        rtt_ms=tuple(50.0 + 60.0 * i / n_rtt for i in range(n_rtt)),
     )
 
 
-def adaptivity(n_frames: int = N_FRAMES):
+def _clear_compiled() -> None:
+    """Fresh-process simulation: drop the online/oracle program factories and
+    jax's trace/compile caches so the next run pays the real cold cost."""
+    for mod in (sim_batch, sim_online_batch):
+        for name in dir(mod):
+            obj = getattr(mod, name)
+            if callable(getattr(obj, "cache_clear", None)):
+                obj.cache_clear()
+    sweep_shard._sharded_jit.cache_clear()
+    jax.clear_caches()
+
+
+def _online_equiv(pr, pb) -> bool:
+    """The certified contract (tests/test_online_batch.py pins the same)."""
+    (sr,), (sb,) = pr.streams, pb.streams
+    return (
+        sr.frames_total == sb.frames_total
+        and sr.frames_processed == sb.frames_processed
+        and sr.frames_missed_deadline == sb.frames_missed_deadline
+        and sr.frames_offloaded == sb.frames_offloaded
+        and sr.schedule_calls == sb.schedule_calls
+        and abs(sr.accuracy_sum - sb.accuracy_sum) <= AUDIT_TOL
+        and pr.meta["rounds"] == pb.meta["rounds"]
+        and pr.meta["estimated_bps"] == pb.meta["estimated_bps"]
+    )
+
+
+def bench_cell(policy: str, params: dict, size: int) -> dict:
+    grid = make_online_grid(size)
+    session = Session(
+        ScenarioSpec(policy=PolicySpec(policy, params), n_frames=N_FRAMES,
+                     trace=_SQUARE, label=f"adaptivity_bench/{policy}/{size}")
+    )
+    _clear_compiled()  # earlier cells must not pre-warm this one's cold pass
+    with _RssSampler() as rss:
+        t0 = time.perf_counter()
+        ref = session.run_sweep(grid, backend="reference", mode="online")
+        reference_s = time.perf_counter() - t0
+        with CompileCounter() as cc:
+            t0 = time.perf_counter()
+            session.run_sweep(grid, backend="batched", mode="online")
+            batched_cold_s = time.perf_counter() - t0
+        with CompileCounter() as cw:
+            t0 = time.perf_counter()
+            bat = session.run_sweep(grid, backend="batched", mode="online")
+            batched_warm_s = time.perf_counter() - t0
+    assert bat.backend == "batched" and bat.meta["engine"] == "sim_online_batch", bat.meta
+    equivalent = all(_online_equiv(pr, pb) for pr, pb in zip(ref.points, bat.points))
+    return {
+        "policy": policy,
+        "params": params,
+        "grid_points": len(grid),
+        "n_frames": N_FRAMES,
+        "trace": "mobility_square",
+        "reference_s": reference_s,
+        "batched_cold_s": batched_cold_s,
+        "batched_warm_s": batched_warm_s,
+        "speedup_cold": reference_s / batched_cold_s if batched_cold_s > 0 else 0.0,
+        "speedup_warm": reference_s / batched_warm_s if batched_warm_s > 0 else 0.0,
+        "compiles_cold": cc.compiles,
+        "compiles_warm": cw.compiles,
+        "peak_rss_mib": round(rss.peak_mib, 1),
+        "equivalent": equivalent,
+    }
+
+
+def run(sizes=SIZES) -> dict:
+    cells = [bench_cell(pol, params, size) for size in sizes for pol, params in POLICIES]
+    return {"bench": "adaptivity", "n_frames": N_FRAMES, "cells": cells}
+
+
+def oracle_vs_estimated(n_frames: int = N_FRAMES):
+    """The original beyond-paper rows: a policy that sees the true trace
+    (``run_sim``) against the deployable estimator-driven loop."""
     rows = []
     for name in ("max_accuracy", "local", "offload"):
-        st = Session(_spec(name, n_frames)).run_sim().stats
-        rows.append((f"adapt/oracleB/{name}", st.schedule_time / max(st.schedule_calls, 1) * 1e6,
+        spec = ScenarioSpec(policy=PolicySpec(name), n_frames=n_frames,
+                            trace=_SQUARE, label="adaptivity")
+        st = Session(spec).run_sim().stats
+        rows.append((f"adapt/oracleB/{name}",
+                     st.schedule_time / max(st.schedule_calls, 1) * 1e6,
                      st.mean_accuracy))
-    st = Session(_spec("max_accuracy", n_frames)).run_online().stats
+    spec = ScenarioSpec(policy=PolicySpec("max_accuracy"), n_frames=n_frames,
+                        trace=_SQUARE, label="adaptivity")
+    st = Session(spec).run_online().stats
     rows.append(("adapt/estimatedB/max_accuracy",
-                 st.schedule_time / max(st.schedule_calls, 1) * 1e6, st.mean_accuracy))
+                 st.schedule_time / max(st.schedule_calls, 1) * 1e6,
+                 st.mean_accuracy))
     return rows
 
 
-ALL = [adaptivity]
+# run.py auto-discovery: smoke-sized rows only (the 1000-point ladder is the
+# CI-artifact run — see main()).
+def online_backend_smoke():
+    rows = []
+    for cell in run(sizes=(10,))["cells"]:
+        name = f"online/{cell['policy']}/n{cell['grid_points']}"
+        rows.append((f"{name}/speedup_warm", cell["batched_warm_s"] * 1e6,
+                     cell["speedup_warm"]))
+        rows.append((f"{name}/equivalent", cell["reference_s"] * 1e6,
+                     float(cell["equivalent"])))
+    return rows
+
+
+ALL = [oracle_vs_estimated, online_backend_smoke]
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
-                    help=f"short trace ({SMOKE_FRAMES} frames; CI smoke)")
+                    help="10-point cells only (CI smoke; still emits the JSON artifact)")
+    ap.add_argument("--out", default=DEFAULT_OUT, help=f"output path (default {DEFAULT_OUT})")
     args = ap.parse_args(argv)
-    print("name,us_per_call,derived")
-    for name, us, derived in adaptivity(SMOKE_FRAMES if args.smoke else N_FRAMES):
-        print(f"{name},{us:.2f},{derived:.6f}", flush=True)
-    return 0
+
+    result = run(sizes=(10,) if args.smoke else SIZES)
+    with open(args.out, "w") as fh:
+        json.dump(result, fh, indent=2)
+        fh.write("\n")
+
+    print(f"{'policy':>14} {'points':>7} {'ref (s)':>9} {'cold (s)':>9} "
+          f"{'warm (s)':>9} {'speedup':>8} {'rss MiB':>8} {'equiv':>6}")
+    ok = True
+    for c in result["cells"]:
+        print(f"{c['policy']:>14} {c['grid_points']:>7} {c['reference_s']:>9.2f} "
+              f"{c['batched_cold_s']:>9.2f} {c['batched_warm_s']:>9.2f} "
+              f"{c['speedup_warm']:>7.1f}x {c['peak_rss_mib']:>8.0f} "
+              f"{str(c['equivalent']):>6}")
+        ok &= c["equivalent"]
+        # the >= 5x acceptance bar applies to the 1000-point Max-Accuracy
+        # cells (see the module docstring for the Max-Utility
+        # honest-CPU-number rationale).
+        if c["grid_points"] >= 1000 and c["policy"] == "max_accuracy":
+            ok &= c["speedup_warm"] >= 5.0
+    print(f"\nwrote {args.out}")
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":

@@ -29,8 +29,9 @@ class BandwidthEstimator:
     beta: float = 0.3  # EWMA weight of the newest sample
     pessimism: float = 0.9
     _bps: float = field(default=0.0, init=False)
-    _rtt: float = field(default=0.1, init=False)
+    _rtt: float = field(default=0.1, init=False)  # stub prior until the first sample
     samples: int = field(default=0, init=False)
+    rtt_samples: int = field(default=0, init=False)
 
     def __post_init__(self) -> None:
         self._bps = self.init_bps
@@ -43,7 +44,13 @@ class BandwidthEstimator:
         self.samples += 1
 
     def observe_rtt(self, seconds: float) -> None:
-        self._rtt = (1 - self.beta) * self._rtt + self.beta * seconds
+        # The 0.1 s default is a stub prior, not a measurement: the first real
+        # sample replaces it outright; later samples blend in by EWMA.
+        if self.rtt_samples == 0:
+            self._rtt = seconds
+        else:
+            self._rtt = (1 - self.beta) * self._rtt + self.beta * seconds
+        self.rtt_samples += 1
 
     def state(self) -> NetworkState:
         return NetworkState(bandwidth_bps=self._bps * self.pessimism, rtt=self._rtt)

@@ -199,6 +199,9 @@ def local_window_plan(
     # replication trick.
     batched=True,
     batched_multi=True,
+    # Online sweeps (core/sim_online_batch): the believed-network re-planning
+    # loop with scan-carried EWMA estimator state, audited on the true trace.
+    batched_online=True,
 )
 def plan_round(
     models: Sequence[ModelProfile],

@@ -174,6 +174,9 @@ def _local_decisions(
     # replication trick.
     batched=True,
     batched_multi=True,
+    # Online sweeps (core/sim_online_batch): the believed-network re-planning
+    # loop with scan-carried EWMA estimator state, audited on the true trace.
+    batched_online=True,
 )
 def plan_round(
     models: Sequence[ModelProfile],

@@ -137,6 +137,12 @@ class PolicyEntry:
     doc: str = ""
     batched: bool = False
     batched_multi: bool = False
+    #: ``batched_online=True`` promises an observe->replan->execute backend in
+    #: :mod:`repro.core.sim_online_batch`: the EWMA estimator state is carried
+    #: on device and re-planning happens against the *believed* network while
+    #: execution is audited against the true trace, exactly like
+    #: ``Session.run_online``.
+    batched_online: bool = False
     #: workload kinds this policy can plan for.  Classification policies
     #: see independent frames; tracking policies (``workloads=("track",)``)
     #: plan a detector placement *and* a detector interval per round.
@@ -181,6 +187,7 @@ def register_policy(
     doc: str = "",
     batched: bool = False,
     batched_multi: bool = False,
+    batched_online: bool = False,
     workloads: Sequence[str] = ("classify",),
 ) -> Callable:
     """Decorator: register ``fn`` as policy ``name`` with a parameter schema.
@@ -203,6 +210,7 @@ def register_policy(
             doc=doc or (fn.__doc__ or "").strip(),
             batched=batched,
             batched_multi=batched_multi,
+            batched_online=batched_online,
             workloads=tuple(workloads),
         )
         return fn

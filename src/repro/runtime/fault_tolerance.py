@@ -63,7 +63,10 @@ class HeartbeatMonitor:
         self.workers: dict[str, _Worker] = {}
 
     def register(self, worker_id: str) -> None:
-        self.workers[worker_id] = _Worker(last_beat=self.clock())
+        """Idempotent membership: a re-registration of a known worker must not
+        resurrect it — only a real heartbeat (:meth:`beat`) proves liveness."""
+        if worker_id not in self.workers:
+            self.workers[worker_id] = _Worker(last_beat=self.clock())
 
     def beat(self, worker_id: str) -> None:
         w = self.workers.setdefault(worker_id, _Worker(last_beat=self.clock()))
@@ -124,7 +127,10 @@ class StragglerMitigator:
     def mitigation(self, worker_id: str) -> str:
         """Decision for a flagged worker (SPMD: collective lockstep, so the
         options are input-side or replacement, never work stealing)."""
-        ratio = self.ewma[worker_id] / max(self.fleet_median(), 1e-9)
+        ewma = self.ewma.get(worker_id)
+        if ewma is None:
+            return "observe"  # no timing data yet: gather samples first
+        ratio = ewma / max(self.fleet_median(), 1e-9)
         if ratio > 3.0:
             return "replace"  # cordon host, trigger elastic remesh
         return "rebalance_input"  # shift data-loader shards away from it
@@ -138,11 +144,21 @@ class ElasticPlan:
     data_parallel_scale: float  # new DP degree / old DP degree
 
 
+def _dp_degree(chips: int, model_axis: int, pod_size: int) -> int:
+    """Total data-parallel degree of the largest coherent mesh on ``chips``:
+    full pods when >= 2 pods fit, otherwise whole multiples of the model axis."""
+    pods = chips // pod_size
+    if pods >= 2:
+        return pods * (pod_size // model_axis)
+    return chips // model_axis
+
+
 def plan_elastic_remesh(
     surviving_chips: int,
     *,
     model_axis: int = 16,
     pod_size: int = 256,
+    prior_chips: int | None = None,
 ) -> ElasticPlan:
     """Largest coherent mesh from the survivors.
 
@@ -150,18 +166,25 @@ def plan_elastic_remesh(
     multiples of the model axis, preferring full pods, and shrink data
     parallelism; global batch is preserved by raising grad-accumulation in
     the train driver (batch semantics stay bit-identical).
+    ``data_parallel_scale`` is measured against the mesh the cluster ran
+    *before* the failure: ``prior_chips`` (default: the historical two-pod
+    cluster, ``2 * pod_size``).
     """
     if surviving_chips < model_axis:
         raise ValueError(f"cannot form a mesh: {surviving_chips} chips < model axis {model_axis}")
+    if prior_chips is None:
+        prior_chips = 2 * pod_size
+    if prior_chips < model_axis:
+        raise ValueError(f"prior cluster invalid: {prior_chips} chips < model axis {model_axis}")
+    old_dp = _dp_degree(prior_chips, model_axis, pod_size)
     pods = surviving_chips // pod_size
     if pods >= 2:
         data = pod_size // model_axis
         return ElasticPlan(
             (pods, data, model_axis), ("pod", "data", "model"),
-            surviving_chips - pods * pod_size, pods * data / (2 * data),
+            surviving_chips - pods * pod_size, pods * data / old_dp,
         )
     data = surviving_chips // model_axis
-    old_dp = 2 * (pod_size // model_axis)
     return ElasticPlan(
         (data, model_axis), ("data", "model"), surviving_chips - data * model_axis,
         data / old_dp,

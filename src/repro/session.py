@@ -43,7 +43,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Iterator, Mapping, Sequence
 
-from .core import sim_batch, sim_multi_batch
+from .core import sim_batch, sim_multi_batch, sim_online_batch
 from .core.audit import AUDIT_TOL, apply_round, audit_round
 from .core.compile_cache import default_cache_dir, enable_compile_cache
 from .core.controller import BandwidthEstimator, OnlineController
@@ -865,12 +865,14 @@ class Session:
 
     # -- mode: a whole scenario grid in one call ---------------------------
     BACKENDS = ("auto", "reference", "batched")
+    SWEEP_MODES = ("auto", "online")
 
     def run_sweep(
         self,
         grid: SweepGrid,
         *,
         backend: str = "auto",
+        mode: str = "auto",
         chunk_size: int | None = None,
         keep_points: bool = True,
         compile_cache: str | None = None,
@@ -907,9 +909,22 @@ class Session:
         * ``compile_cache`` — enable jax's persistent compilation cache at
           this directory (defaults to ``$REPRO_COMPILE_CACHE`` when set),
           so re-runs load planner executables instead of recompiling.
+
+        ``mode="online"`` sweeps the observe->replan->execute world of
+        ``run_online`` instead of the oracle-bandwidth simulator: each grid
+        point carries its own EWMA estimator belief and the audit uses the
+        true trace.  Policies registered ``batched_online=True`` run the
+        whole grid through ``core/sim_online_batch`` (estimator state
+        scan-carried on device; integer stats exact, accuracy within
+        AUDIT_TOL of the reference — see docs/simulation.md "Online
+        adaptation"); everything else falls back to per-point
+        ``run_online``.  Online sweeps are single-stream: a fleet anywhere
+        in the grid is a ``ValueError``.
         """
         if backend not in self.BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; want one of {self.BACKENDS}")
+        if mode not in self.SWEEP_MODES:
+            raise ValueError(f"unknown sweep mode {mode!r}; want one of {self.SWEEP_MODES}")
         if chunk_size is not None and int(chunk_size) < 1:
             raise ValueError(f"chunk_size must be a positive int, got {chunk_size!r}")
         cache_dir = compile_cache if compile_cache is not None else default_cache_dir()
@@ -931,6 +946,8 @@ class Session:
                 n_points,
             )
         meta: dict[str, Any] = {"requested_backend": backend, "grid_points": n_points}
+        if mode != "auto":
+            meta["mode"] = mode
         if cache_dir:
             meta["compile_cache"] = str(cache_dir)
         streaming = chunk_size is not None or not keep_points
@@ -946,32 +963,51 @@ class Session:
                 break
             n_chunks += 1
             specs = [_apply_point(self.spec, p) for p in pts]
+            if mode == "online" and any(s.fleet is not None for s in specs):
+                raise ValueError(
+                    "sweep mode 'online' is single-stream (run_online has no "
+                    "fleet engine); drop the fleet or use mode='auto'"
+                )
+            if mode == "online" and any(s.workload.is_track for s in specs):
+                raise ValueError(
+                    "mode 'online' does not execute the tracking workload "
+                    "yet; use run_sim/run_multi/run_sweep"
+                )
             if use_batched is None:
-                capable, why = self._batched_capability(entry, specs)
+                capable, why = self._batched_capability(entry, specs, mode=mode)
                 use_batched = capable if backend == "auto" else backend == "batched"
                 if use_batched and not capable:
                     _LOG.warning(
                         "%s; run_sweep falling back to the reference loop "
-                        "(batched policies: %s; batched fleet policies: %s)",
+                        "(batched policies: %s; batched fleet policies: %s; "
+                        "batched online policies: %s)",
                         why,
                         sim_batch.batched_policies(),
                         sim_multi_batch.multi_batched_policies(),
+                        sim_online_batch.batched_online_policies(),
                     )
                     meta["fallback"] = why
                     use_batched = False
                 if use_batched:
-                    meta["engine"] = (
-                        "sim_multi_batch"
-                        if any(s.fleet is not None for s in specs)
-                        else "sim_batch"
-                    )
+                    if mode == "online":
+                        meta["engine"] = "sim_online_batch"
+                    else:
+                        meta["engine"] = (
+                            "sim_multi_batch"
+                            if any(s.fleet is not None for s in specs)
+                            else "sim_batch"
+                        )
             if use_batched:
-                if meta["engine"] == "sim_multi_batch":
+                if meta["engine"] == "sim_online_batch":
+                    points = self._sweep_batched_online(specs, pts)
+                elif meta["engine"] == "sim_multi_batch":
                     points = self._sweep_batched_multi(specs, pts)
                 else:
                     points = self._sweep_batched(specs, pts)
             else:
-                points = [self._sweep_reference(s, p) for s, p in zip(specs, pts)]
+                points = [
+                    self._sweep_reference(s, p, mode=mode) for s, p in zip(specs, pts)
+                ]
             if clobbers:
                 for point in points:
                     point.meta["trace_override"] = (
@@ -999,7 +1035,9 @@ class Session:
             meta=meta,
         )
 
-    def _batched_capability(self, entry, specs: Sequence[ScenarioSpec]) -> tuple[bool, str]:
+    def _batched_capability(
+        self, entry, specs: Sequence[ScenarioSpec], mode: str = "auto"
+    ) -> tuple[bool, str]:
         """Can this (policy, grid) combination run on a vectorized engine?
 
         Single-stream grids need ``batched=True`` (``sim_batch``); both
@@ -1010,8 +1048,13 @@ class Session:
         per-client DP with the shared water-filled link; local-only
         planners run one lane per scenario) — and a fleet at every grid
         point (the engines do not mix fleet and single-stream lanes in
-        one program).
+        one program).  Online sweeps need ``batched_online=True``
+        (``sim_online_batch`` — the scan-carried estimator loop).
         """
+        if mode == "online":
+            if entry.batched_online:
+                return True, ""
+            return False, f"policy {entry.name!r} has no batched online backend"
         fleet_pts = sum(1 for s in specs if s.fleet is not None)
         if fleet_pts == 0:
             if entry.batched:
@@ -1026,8 +1069,13 @@ class Session:
             )
         return True, ""
 
-    def _sweep_reference(self, spec: ScenarioSpec, pt: Mapping[str, Any]) -> SweepPoint:
-        rep = Session(spec).run("multi" if spec.fleet is not None else "sim")
+    def _sweep_reference(
+        self, spec: ScenarioSpec, pt: Mapping[str, Any], mode: str = "auto"
+    ) -> SweepPoint:
+        if mode == "online":
+            rep = Session(spec).run("online")
+        else:
+            rep = Session(spec).run("multi" if spec.fleet is not None else "sim")
         return SweepPoint(overrides=dict(pt), streams=rep.streams, meta=dict(rep.meta))
 
     def _sweep_batched(
@@ -1055,6 +1103,35 @@ class Session:
                 meta={"policy": spec.policy.name},
             )
             for spec, pt, st in zip(specs, pts, stats)
+        ]
+
+    def _sweep_batched_online(
+        self, specs: list[ScenarioSpec], pts: list[dict[str, Any]]
+    ) -> list[SweepPoint]:
+        """Online grid through the vectorized estimator loop: every point's
+        observe->replan->execute rounds run on device; per-point meta mirrors
+        what ``run_online`` reports (round count, final believed bandwidth)."""
+        base = self.spec
+        scens = [
+            sim_online_batch.OnlineScenario(
+                stream=s.stream,
+                n_frames=s.n_frames,
+                params=s.policy.resolved,
+                rtt=s.trace.rtt_s,
+                bw_segments=s.trace.segments(),
+            )
+            for s in specs
+        ]
+        results = sim_online_batch.simulate_online_batch(
+            base.policy.name, list(base.models), scens, strict=base.strict
+        )
+        return [
+            SweepPoint(
+                overrides=dict(pt),
+                streams=[st],
+                meta={"policy": spec.policy.name, **lane_meta},
+            )
+            for spec, pt, (st, lane_meta) in zip(specs, pts, results)
         ]
 
     def _sweep_batched_multi(
@@ -1138,6 +1215,9 @@ def _sweep_main(argv: Sequence[str]) -> int:
     ap.add_argument("spec", nargs="?", help="path to ScenarioSpec JSON, or '-' for stdin")
     ap.add_argument("--grid", help="path to SweepGrid JSON (see --example-grid)")
     ap.add_argument("--backend", default="auto", choices=Session.BACKENDS)
+    ap.add_argument("--mode", default="auto", choices=Session.SWEEP_MODES,
+                    help="'online' sweeps the estimated-bandwidth controller "
+                    "loop (run_online) instead of the oracle simulator")
     ap.add_argument("--out", help="write the SweepReport JSON here; print a summary instead")
     ap.add_argument("--chunk-size", type=int, default=None, metavar="N",
                     help="stream the grid in chunks of N points (bit-identical "
@@ -1163,6 +1243,7 @@ def _sweep_main(argv: Sequence[str]) -> int:
         report = Session(spec).run_sweep(
             grid,
             backend=args.backend,
+            mode=args.mode,
             chunk_size=args.chunk_size,
             keep_points=not args.summary_only,
             compile_cache=args.compile_cache,

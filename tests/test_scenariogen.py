@@ -1,0 +1,159 @@
+"""Scenario-generator library: every kind lowers to a valid, JSON-stable
+TraceSpec and runs through the engines' front door unchanged; the fault
+generator's detected-outage window reflects the heartbeat monitor's real
+detection lag."""
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro import scenariogen
+from repro.core import PAPER_MODELS, PAPER_STREAM, Trace, make_policy, simulate
+from repro.scenariogen import dead_edge_models, degrade, edge_failure
+from repro.session import ScenarioSpec, Session, SweepGrid, TraceSpec
+
+
+def test_catalog_is_sorted_and_closed():
+    kinds = scenariogen.trace_kinds()
+    assert kinds == tuple(sorted(kinds))
+    assert set(kinds) == set(scenariogen.TRACE_KINDS)
+    with pytest.raises(ValueError, match="unknown scenario kind"):
+        scenariogen.make_trace("tsunami")
+
+
+@pytest.mark.parametrize("kind", scenariogen.trace_kinds())
+def test_every_kind_yields_a_valid_json_stable_trace(kind):
+    trace = scenariogen.make_trace(kind)
+    assert isinstance(trace, TraceSpec)
+    assert trace.kind == "piecewise"
+    ts = [t for t, _ in trace.points]
+    assert ts == sorted(ts) and len(ts) == len(set(ts))  # strictly increasing
+    assert all(bw >= 0.0 for _, bw in trace.points)
+    # the round trip is exact: a catalog entry pins its trace bit-for-bit
+    back = TraceSpec.from_json(json.loads(json.dumps(trace.to_json())))
+    assert back == trace
+
+
+@pytest.mark.parametrize("kind", scenariogen.trace_kinds())
+def test_generators_are_pure(kind):
+    assert scenariogen.make_trace(kind) == scenariogen.make_trace(kind)
+
+
+def test_mobility_square_shape():
+    tr = scenariogen.make_trace(
+        "mobility_square", high_mbps=3.0, low_mbps=1.0, period_s=2.0,
+        duty=0.25, duration_s=4.0,
+    )
+    assert tr.points == ((0.0, 3.0), (0.5, 1.0), (2.0, 3.0), (2.5, 1.0))
+
+
+def test_mobility_ramp_holds_peak_with_centered_dip():
+    tr = scenariogen.make_trace(
+        "mobility_ramp", low_mbps=1.0, high_mbps=4.0, ramp_s=3.0, hold_s=2.0,
+        steps=4, dip_mbps=0.2, dip_s=1.0,
+    )
+    vals = dict(tr.points)
+    assert vals[3.0] == 4.0  # peak opens the hold
+    assert vals[3.5] == 0.2 and vals[4.5] == 4.0  # dip centered in the hold
+    assert tr.points[-1][1] == 1.0  # staircase returns to low
+
+
+def test_flash_crowd_events_never_overlap_and_seed_pins_the_trace():
+    a = scenariogen.make_trace("flash_crowd", n_events=5, seed=7)
+    b = scenariogen.make_trace("flash_crowd", n_events=5, seed=7)
+    assert a == b
+    assert a != scenariogen.make_trace("flash_crowd", n_events=5, seed=8)
+    # alternating collapse/restore implies the events are disjoint
+    levels = [bw for _, bw in a.points]
+    for prev, cur in zip(levels, levels[1:]):
+        assert prev != cur
+
+
+def test_diurnal_respects_amplitude_bound():
+    with pytest.raises(ValueError, match="amplitude_mbps"):
+        scenariogen.make_trace("diurnal", base_mbps=1.0, amplitude_mbps=2.0)
+    tr = scenariogen.make_trace("diurnal", base_mbps=2.0, amplitude_mbps=2.0)
+    assert min(bw for _, bw in tr.points) >= 0.0
+    assert tr.points[0][1] == pytest.approx(4.0)  # peak at t=0
+
+
+def test_edge_failure_detection_lags_the_crash():
+    rep = edge_failure(
+        fail_at_s=4.0, recover_at_s=8.0, duration_s=16.0,
+        interval_s=0.25, suspect_after=2.0, dead_after=4.0,
+    )
+    # last beat lands at 3.75; DEAD after 4 intervals (1 s) of silence
+    assert rep.fail_at_s == 4.0
+    assert rep.detected_at_s == 5.0
+    assert rep.recovered_at_s == 8.0  # first post-recovery heartbeat
+    assert ("suspect" in {s for _, s in rep.events})
+    # the degraded window of the trace is the *detected* outage
+    vals = dict(rep.trace.points)
+    assert vals[5.0] == 0.05 and vals[8.0] == 3.5
+
+
+def test_edge_failure_rejects_undetectable_outages():
+    with pytest.raises(ValueError, match="outage too short"):
+        edge_failure(fail_at_s=4.0, recover_at_s=4.5, duration_s=16.0,
+                     interval_s=0.25, dead_after=8.0)
+    with pytest.raises(ValueError, match="fail_at_s"):
+        edge_failure(fail_at_s=5.0, recover_at_s=4.0)
+
+
+def test_degrade_splices_windows_and_validates():
+    base = TraceSpec(kind="constant", mbps=3.5, rtt_ms=80.0)
+    tr = degrade(base, [(2.0, 5.0)], to_mbps=0.1)
+    assert tr.points == ((0.0, 3.5), (2.0, 0.1), (5.0, 3.5))
+    assert tr.rtt_ms == 80.0
+    with pytest.raises(ValueError, match="start < end"):
+        degrade(base, [(5.0, 2.0)])
+    with pytest.raises(ValueError, match="overlap"):
+        degrade(base, [(1.0, 4.0), (3.0, 6.0)])
+    with pytest.raises(ValueError, match="to_mbps"):
+        degrade(base, [(1.0, 2.0)], to_mbps=-1.0)
+
+
+def test_degrade_overrides_base_points_inside_the_window():
+    base = TraceSpec(kind="piecewise", points=((0.0, 3.0), (3.0, 1.0)), rtt_ms=100.0)
+    tr = degrade(base, [(2.0, 4.0)], to_mbps=0.0)
+    # the (3.0, 1.0) base point is swallowed; its value resumes at the end
+    assert tr.points == ((0.0, 3.0), (2.0, 0.0), (4.0, 1.0))
+
+
+def test_dead_edge_models_force_the_npu_path():
+    dead = dead_edge_models(PAPER_MODELS)
+    assert all(m.t_server == float("inf") for m in dead)
+    st = simulate(
+        make_policy("max_accuracy"), list(dead), PAPER_STREAM,
+        Trace.constant(3.0), 60,
+    )
+    assert st.frames_offloaded == 0
+    assert st.frames_processed == 60
+
+
+def test_make_scenario_runs_through_the_front_door():
+    spec = scenariogen.make_scenario(
+        "mobility_square", policy="max_accuracy", n_frames=30, period_s=2.0
+    )
+    assert spec.label == "mobility_square"
+    back = ScenarioSpec.from_json(json.loads(json.dumps(spec.to_json())))
+    assert back.trace == spec.trace
+    sim = Session(spec).run_sim()
+    online = Session(spec).run_online()
+    assert sim.streams[0].frames_total == online.streams[0].frames_total == 30
+    assert online.meta["rounds"] == online.streams[0].schedule_calls
+
+
+def test_generated_fault_scenario_sweeps_on_the_batched_backends():
+    spec = scenariogen.make_scenario(
+        "edge_failure", policy={"name": "max_accuracy", "params": {"grid": 0.01}},
+        n_frames=45, fail_at_s=1.0, recover_at_s=2.0, duration_s=4.0,
+        suspect_after=1.0, dead_after=2.0,
+    )
+    grid = SweepGrid(rtt_ms=(60.0, 100.0))
+    oracle = Session(spec).run_sweep(grid, backend="batched")
+    online = Session(spec).run_sweep(grid, backend="batched", mode="online")
+    assert oracle.meta["engine"] == "sim_batch"
+    assert online.meta["engine"] == "sim_online_batch"
+    assert len(oracle.points) == len(online.points) == 2
