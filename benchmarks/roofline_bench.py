@@ -8,6 +8,7 @@ import json
 from pathlib import Path
 
 ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+SERVING_ARTIFACT = Path(__file__).resolve().parent.parent / "BENCH_serving.json"
 
 
 def roofline_summary():
@@ -22,7 +23,23 @@ def roofline_summary():
     return rows
 
 
-ALL = [roofline_summary]
+def measured_serving_summary():
+    """Measured (not modeled) rows: per-model latency of the executed int8
+    Pallas path vs the fp32 edge path, from serving_bench's calibration
+    artifact — ``us_per_call`` = measured t_npu, ``derived`` = the
+    server/NPU latency ratio (>1 means the local path is faster here)."""
+    if not SERVING_ARTIFACT.exists():
+        return []  # optional companion rows; serving_bench emits the artifact
+    rec = json.loads(SERVING_ARTIFACT.read_text())
+    rows = []
+    for m in rec.get("calibration", {}).get("models", []):
+        name = f"roofline/serving_measured/{m['name']}"
+        ratio = m["t_server_ms"] / m["t_npu_ms"] if m["t_npu_ms"] > 0 else 0.0
+        rows.append((f"{name}/t_npu", m["t_npu_ms"] * 1e3, ratio))
+    return rows
+
+
+ALL = [roofline_summary, measured_serving_summary]
 
 
 def main(argv=None) -> int:

@@ -139,6 +139,12 @@ def network_mbps(mbps: float, rtt_ms: float = 100.0) -> NetworkState:
 # numerically; the curves below are monotone, concave, anchored at Table II's
 # 224px values, and reproduce its qualitative shape ("accuracy does not scale
 # linearly with the resolution").
+#
+# These are the FALLBACK when no measured profile exists: they are typed-in
+# constants from the paper's hardware, not this host's.  For profiles measured
+# by actually executing the int8 Pallas path vs the full-precision edge path
+# on the current backend, run ``serving/calibrate.py`` and load its JSON
+# artifact through ``ScenarioSpec`` (see docs/serving.md).
 # ---------------------------------------------------------------------------
 
 RESNET50 = profile_ms(

@@ -29,6 +29,13 @@ def _pad_to(x, m, axis):
     return jnp.pad(x, widths)
 
 
+def _pow2ceil(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
 def npu_matmul(
     x: jax.Array, w: jax.Array, *, out_dtype=jnp.float32, interpret: bool | None = None
 ) -> jax.Array:
@@ -59,15 +66,24 @@ def npu_matmul_prequant(
         interpret = not _on_tpu()
     M, K = x_q.shape
     N = w_q.shape[1]
-    bm = min(block_m, M) if M % min(block_m, M) == 0 else block_m
+    # Adaptive block sizes: small matmuls (the serving single-frame case —
+    # M=1 head GEMMs, narrow im2col convs) shrink each block to the next
+    # power of two instead of padding every dim to the full 128/512/128
+    # tile.  The Mosaic (TPU) path keeps the int8 tiling minima — 32
+    # sublanes on the second-minor dim, 128 lanes on the minor dim.
+    bm = min(block_m, _pow2ceil(M))
+    bn = min(block_n, _pow2ceil(N))
+    bk = min(block_k, _pow2ceil(K))
+    if not interpret:
+        bm, bn, bk = max(bm, 32), max(bn, 128), max(bk, 128)
     # Pad every dim to its block multiple; slice back after.
-    xq = _pad_to(_pad_to(x_q, block_m, 0), block_k, 1)
-    wq = _pad_to(_pad_to(w_q, block_k, 0), block_n, 1)
-    xs = _pad_to(x_scale, block_m, 0)
-    ws = _pad_to(w_scale, block_n, 0)
+    xq = _pad_to(_pad_to(x_q, bm, 0), bk, 1)
+    wq = _pad_to(_pad_to(w_q, bk, 0), bn, 1)
+    xs = _pad_to(x_scale, bm, 0)
+    ws = _pad_to(w_scale, bn, 0)
     out = kernel.int8_matmul(
         xq, wq, xs, ws,
-        block_m=block_m, block_n=block_n, block_k=block_k,
+        block_m=bm, block_n=bn, block_k=bk,
         out_dtype=out_dtype, interpret=interpret,
     )
     return out[:M, :N]

@@ -1,5 +1,6 @@
-"""Serving driver: stand up NPU (int8) + edge (fp32) variants of a classifier
-pair, profile them, and run the FastVA controller over a synthetic video.
+"""Serving driver: stand up NPU (int8-Pallas) + edge (fp32) variants of a
+classifier pair, calibrate measured profiles, and run the FastVA controller
+over a synthetic video.
 
     PYTHONPATH=src python -m repro.launch.serve --policy max_accuracy \
         --frames 200 --fps 30 --bandwidth 2.0
@@ -9,19 +10,23 @@ requests scheduled across the quantized local path and the full-precision
 edge path under a per-frame deadline.  The CLI is a thin wrapper that builds
 a declarative ``ScenarioSpec`` and routes it through ``Session.run_serving``;
 ``run_scenario`` is the engine that the Session facade calls back into.
+
+Profiles come from ``serving/calibrate``: both latency tables are measured by
+executing the variants (the NPU variant's matmuls run in the real
+``kernels/npu_matmul`` Pallas kernel), and the per-resolution accuracy table
+is scored on degraded held-out frames — nothing hand-typed.
 """
 from __future__ import annotations
 
 import argparse
-import time
 from typing import TYPE_CHECKING
 
 if TYPE_CHECKING:
     from ..session import ScenarioSpec
 
-# How long each known classifier trains before profiling: enough to separate
-# the fp32/int8 accuracy profiles on the synthetic video distribution.
-TRAIN_STEPS = {"resnet-50": 150, "squeezenet": 400}
+# Re-exported for compatibility: the training budget now lives with the
+# calibration pipeline.
+from ..serving.calibrate import TRAIN_STEPS  # noqa: F401
 
 
 def run_scenario(spec: "ScenarioSpec") -> dict:
@@ -29,103 +34,66 @@ def run_scenario(spec: "ScenarioSpec") -> dict:
 
     The model *names* in ``spec.models`` select architectures from
     ``repro.configs``; their profiles are re-measured live on this host
-    (latency) and on held-out synthetic frames (accuracy), because serving
-    schedules against reality, not against Table II.
+    (latency of both executed variants, accuracy per offload resolution on
+    held-out frames), because serving schedules against reality, not against
+    Table II.
     """
-    import jax
-    import jax.numpy as jnp
-    import numpy as np
-
-    from .. import configs, quant
-    from ..arch import classifier_forward
-    from ..arch import abstract_params as arch_params
-    from ..core import BandwidthEstimator, OnlineController, profile_ms
-    from ..models.common import init_tree
-    from ..serving import ModelEndpoint, VideoServer, make_synthetic_video
+    from ..core import BandwidthEstimator, OnlineController
+    from ..serving import (
+        BatchedEndpoint,
+        CalibrationConfig,
+        EdgeBatchServer,
+        VideoServer,
+        calibrate,
+        make_synthetic_video,
+    )
+    from ..session import _model_from_json
 
     n_classes = 10
     res = 32
     seed = spec.seed
-    net0 = spec.trace.build().at(0.0)
+    trace = spec.trace.build()
+    net0 = trace.at(0.0)
 
-    def quick_train(arch, params, state, *, steps=120, bs=32, lr=3e-3, seed=7):
-        """Fit the classifier to the synthetic video distribution so the
-        accuracy profiles (and the int8 drop) are real."""
-        from ..train import optim
+    import dataclasses
 
-        cfgopt = optim.AdamWConfig(lr=lr, warmup_steps=10, total_steps=steps, weight_decay=0.0)
-        opt = optim.init_opt_state(params)
-        tr_frames, tr_labels = make_synthetic_video(2048, n_classes=n_classes, res=res, seed=seed)
-
-        def loss_fn(p, s, x, y):
-            logits, ns = classifier_forward(arch, p, s, x, train=True)
-            logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
-            return -jnp.mean(jnp.take_along_axis(logp, y[:, None], -1)), ns
-
-        @jax.jit
-        def step_fn(p, s, opt, x, y):
-            (loss, ns), g = jax.value_and_grad(loss_fn, has_aux=True)(p, s, x, y)
-            p2, opt2, _ = optim.adamw_update(cfgopt, p, g, opt)
-            return p2, ns, opt2, loss
-
-        rng = np.random.default_rng(seed)
-        loss = None
-        for i in range(steps):
-            idx = rng.integers(0, len(tr_frames), bs)
-            params, state, opt, loss = step_fn(
-                params, state, opt, jnp.asarray(tr_frames[idx]), jnp.asarray(tr_labels[idx])
-            )
-        return params, state, float(loss)
-
-    # The paper's model pair: accurate (resnet) vs compact (squeezenet).
-    pair = []
-    for m in spec.models:
-        name = m.name
-        tsteps = TRAIN_STEPS.get(name, 150)
-        arch = configs.get(name, smoke=True)
-        specs, state_specs = arch_params(arch)
-        params = init_tree(jax.random.key(seed), specs)
-        state = init_tree(jax.random.key(seed + 1), state_specs)
-        params, state, final_loss = quick_train(arch, params, state, steps=tsteps)
-        print(f"{name}: trained {tsteps} steps, loss={final_loss:.3f}", flush=True)
-        qparams, qstats = quant.npu_variant(params)
-        fwd = lambda p, x, a=arch, s=state: classifier_forward(a, p, s, x, train=False)[0]
-        pair.append((name, arch, params, qparams, fwd, qstats))
+    smoke = spec.n_frames <= 64
+    cfg = CalibrationConfig.smoke(seed=seed) if smoke else CalibrationConfig(seed=seed)
+    cfg = dataclasses.replace(
+        cfg,
+        model_names=tuple(m.name for m in spec.models),
+        n_classes=n_classes,
+        res=res,
+        resolutions=spec.stream.resolutions,
+    )
+    cal = calibrate(cfg)
+    models = [_model_from_json(m.payload) for m in cal.models]
+    for m in cal.artifact["models"]:
+        prov = m["provenance"]
+        print(
+            f"{m['name']}: t_npu={m['t_npu_ms']:.1f}ms t_server={m['t_server_ms']:.1f}ms "
+            f"acc_npu={max(m['acc_npu'].values()):.3f} "
+            f"agreement={prov['fp32_int8_agreement']:.3f} "
+            f"quant_err={prov['quant_mean_rel_err']:.4f}",
+            flush=True,
+        )
 
     frames, labels = make_synthetic_video(spec.n_frames, n_classes=n_classes, res=res, seed=seed)
-    x0 = jnp.asarray(frames[:1])
 
-    # Profile both variants on this host; feed measured times + the paper's
-    # accuracy table shape into the controller.
-    models = []
-    npu_eps, edge_eps = {}, {}
-    for j, (name, arch, params, qparams, fwd, qstats) in enumerate(pair):
-        npu = ModelEndpoint(f"{name}-npu", lambda x, p=qparams, f=fwd: f(p, x), profile_latency_s=0)
-        edge = ModelEndpoint(f"{name}-edge", lambda x, p=params, f=fwd: f(p, x), profile_latency_s=0)
-        npu.warmup(x0)
-        edge.warmup(x0)
-        t0 = time.perf_counter(); [npu(np.asarray(x0)) for _ in range(3)]
-        t_npu = (time.perf_counter() - t0) / 3
-        t0 = time.perf_counter(); [edge(np.asarray(x0)) for _ in range(3)]
-        t_edge = (time.perf_counter() - t0) / 3
-        # Accuracy profile: measured agreement on held-out synthetic frames.
-        hold, hold_labels = make_synthetic_video(128, n_classes=n_classes, res=res, seed=99)
-        acc_fp = float(np.mean(np.argmax(edge.forward(jnp.asarray(hold)), -1) == hold_labels))
-        acc_q = float(np.mean(np.argmax(npu.forward(jnp.asarray(hold)), -1) == hold_labels))
-        models.append(
-            profile_ms(
-                name,
-                t_npu_ms=max(t_npu * 1e3, 1.0),
-                t_server_ms=max(t_edge * 1e3, 1.0),
-                acc_server={45: acc_fp * 0.4, 90: acc_fp * 0.7, 134: acc_fp * 0.85,
-                            179: acc_fp * 0.95, 224: acc_fp},
-                acc_npu={224: acc_q},
-            )
+    npu_eps = {j: cm.npu_endpoint for j, cm in enumerate(cal.models)}
+    # Edge inference goes through the batch server: one bucket-padded forward
+    # per model per round, exactly like a shared edge GPU would take it.
+    batched = {
+        j: BatchedEndpoint(
+            f"{cm.payload['name']}-edge-batch",
+            lambda x, p=cm.params, f=cm.forward: f(p, x),
+            max_batch=16,
         )
-        npu_eps[j], edge_eps[j] = npu, edge
-        print(f"{name}: t_npu={t_npu*1e3:.1f}ms t_edge={t_edge*1e3:.1f}ms "
-              f"acc_fp={acc_fp:.3f} acc_int8={acc_q:.3f} quant_err={qstats.mean_rel_err:.4f}",
-              flush=True)
+        for j, cm in enumerate(cal.models)
+    }
+    for ep in batched.values():
+        ep.warmup(frames[0])
+    edge_server = EdgeBatchServer(batched)
 
     controller = OnlineController(
         models=models,
@@ -135,12 +103,17 @@ def run_scenario(spec: "ScenarioSpec") -> dict:
     )
     controller.estimator.observe_rtt(net0.rtt)
     server = VideoServer(
-        controller=controller, npu_endpoints=npu_eps, edge_endpoints=edge_eps, stream=spec.stream
+        controller=controller,
+        npu_endpoints=npu_eps,
+        stream=spec.stream,
+        trace=trace,
+        edge_server=edge_server,
     )
     summary = server.run(frames, labels)
     summary["policy"] = spec.policy.name
     summary["scheduler_rounds"] = controller.rounds
-    print(f"serve summary: {summary}", flush=True)
+    summary["calibration"] = cal.artifact
+    print(f"serve summary: { {k: v for k, v in summary.items() if k != 'calibration'} }", flush=True)
     return summary
 
 

@@ -137,3 +137,45 @@ def shard(x: jax.Array, *axes: str | None) -> jax.Array:
 
 def current_rules():
     return _ACTIVE_RULES[-1] if _ACTIVE_RULES else None
+
+
+# ---------------------------------------------------------------------------
+# Matmul backend hook — the "NPU execution" seam.  Model families lower their
+# GEMMs (classifier heads, and convolutions via im2col) through matmul(); an
+# installed backend replaces the plain jnp contraction — quant/npu_exec uses
+# this to route every matmul of the int8 variant through the Pallas
+# kernels/npu_matmul kernel (interpret mode on CPU, Mosaic on TPU).  Outside
+# a backend context matmul() is exactly ``x @ w``, so training and the fp32
+# "edge" path are untouched.
+# ---------------------------------------------------------------------------
+
+_ACTIVE_MATMUL: list[Any] = []
+
+
+class matmul_backend:
+    """Context manager installing fn(x2d [M, K], w2d [K, N]) -> [M, N] for
+    every matmul() call (active at trace time, so it composes with jit)."""
+
+    def __init__(self, fn: Any):
+        self.fn = fn
+
+    def __enter__(self):
+        _ACTIVE_MATMUL.append(self.fn)
+        return self.fn
+
+    def __exit__(self, *exc):
+        _ACTIVE_MATMUL.pop()
+
+
+def current_matmul():
+    return _ACTIVE_MATMUL[-1] if _ACTIVE_MATMUL else None
+
+
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """[..., K] x [K, N] through the active backend (plain ``@`` if none)."""
+    if not _ACTIVE_MATMUL:
+        return x @ w
+    fn = _ACTIVE_MATMUL[-1]
+    lead = x.shape[:-1]
+    out = fn(x.reshape(-1, x.shape[-1]), w)
+    return out.reshape(*lead, w.shape[-1]).astype(x.dtype)

@@ -14,7 +14,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from .common import shard, spec
+from .common import current_matmul, matmul, shard, spec
 from .lm import _stack
 
 BN_MOMENTUM = 0.9
@@ -25,6 +25,8 @@ def conv_spec(kh, kw, cin, cout, name_in="conv_in", name_out="conv_out"):
 
 
 def conv(p, x, stride=1, padding="SAME", groups=1):
+    if current_matmul() is not None and groups == 1:
+        return _conv_via_matmul(p, x, stride, padding)
     return jax.lax.conv_general_dilated(
         x,
         p.astype(x.dtype),
@@ -33,6 +35,23 @@ def conv(p, x, stride=1, padding="SAME", groups=1):
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
         feature_group_count=groups,
     )
+
+
+def _conv_via_matmul(p, x, stride, padding):
+    """im2col lowering: the conv as ONE [B*H'*W', KH*KW*Cin] x [., Cout] GEMM
+    through the active matmul backend — how NPUs (and the int8 Pallas path)
+    actually execute convolutions.  Depthwise convs (groups > 1) stay on
+    lax.conv: they are channel-parallel scalar products, not GEMMs."""
+    kh, kw, cin, cout = p.shape
+    w2d = p.astype(x.dtype)
+    if (kh, kw) == (1, 1) and stride == 1:  # pointwise: a matmul over channels
+        return matmul(x, w2d.reshape(cin, cout))
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # [B, H', W', Cin*KH*KW] with Cin slowest (lax patch order)
+    w2d = jnp.transpose(w2d, (2, 0, 1, 3)).reshape(cin * kh * kw, cout)
+    return matmul(patches, w2d)
 
 
 def bn_specs(ch):
@@ -168,7 +187,7 @@ def resnet_forward(c: ResNetConfig, params, state, images, *, train: bool = Fals
             )
         x = shard(x, "batch", None, None, None)
     h = x.mean(axis=(1, 2))
-    logits = h @ params["head"]["w"].astype(h.dtype) + params["head"]["b"].astype(h.dtype)
+    logits = matmul(h, params["head"]["w"].astype(h.dtype)) + params["head"]["b"].astype(h.dtype)
     return logits.astype(jnp.float32), ns
 
 
@@ -315,7 +334,7 @@ def effnet_forward(c: EfficientNetConfig, params, state, images, *, train: bool 
     x = conv(params["head_conv"]["conv"], x)
     x, ns["head_conv"]["bn"] = batchnorm(params["head_conv"]["bn"], state["head_conv"]["bn"], x, train)
     h = jax.nn.silu(x).mean(axis=(1, 2))
-    logits = h @ params["head"]["w"].astype(h.dtype) + params["head"]["b"].astype(h.dtype)
+    logits = matmul(h, params["head"]["w"].astype(h.dtype)) + params["head"]["b"].astype(h.dtype)
     return logits.astype(jnp.float32), ns
 
 

@@ -1,3 +1,8 @@
+from .npu_exec import (  # noqa: F401
+    npu_dense,
+    npu_execution,
+    npu_forward,
+)
 from .quantize import (  # noqa: F401
     QuantStats,
     agreement,

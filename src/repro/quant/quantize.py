@@ -52,6 +52,7 @@ def quant_error_stats(params: Any, qparams: Any) -> QuantStats:
     rels = []
     for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(qparams)):
         if not jnp.issubdtype(a.dtype, jnp.floating):
+            stats.leaves_kept += 1  # int/bool leaves pass through unquantized
             continue
         if a.shape == b.shape and bool(jnp.any(a != b)):
             denom = float(jnp.linalg.norm(a.astype(jnp.float32))) or 1.0

@@ -1,3 +1,12 @@
+from .calibrate import (  # noqa: F401
+    CalibratedModel,
+    Calibration,
+    CalibrationConfig,
+    calibrate,
+    load_calibration,
+    save_calibration,
+    train_classifier,
+)
 from .engine import (  # noqa: F401
     BatchedEndpoint,
     BatchStats,
@@ -7,5 +16,6 @@ from .engine import (  # noqa: F401
     ModelEndpoint,
     OffloadRequest,
     VideoServer,
+    degrade_frame,
     make_synthetic_video,
 )

@@ -33,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import OnlineController, StreamSpec
-from ..core.profiles import ModelProfile
+from ..core.profiles import ModelProfile, NetworkState
 from ..core.schedule import Where
 
 
@@ -136,7 +136,11 @@ class BatchedEndpoint:
             out = np.asarray(self.forward(x))
             outs.append(out[: len(chunk)])
             self.stats.padded += pad
-        self.stats.flushes += 1
+            # One flush per FORWARD, not per __call__: an oversized batch
+            # split into max_batch chunks is several forwards, and counting
+            # it as one would overstate mean_batch/pad_fraction — exactly
+            # the batching-efficiency stats the serving bench reports.
+            self.stats.flushes += 1
         self.stats.frames += len(images)
         self.stats.total_s += time.perf_counter() - t0
         return np.concatenate(outs)
@@ -234,66 +238,141 @@ def make_synthetic_video(
     return frames, labels
 
 
+def degrade_frame(frame: np.ndarray, resolution: int, *, r_ref: int = 224) -> np.ndarray:
+    """Emulate offloading at resolution ``r``: resize H×W down by the
+    fraction ``r / r_ref`` and back up, so the edge model sees the
+    information loss of the paper's offload resize at its native input
+    size.  ``r >= r_ref`` (and the NPU path, which never resizes) is the
+    identity.  Shared by the calibration pipeline (``serving/calibrate``
+    scores acc_server[r] on exactly this transform) and the serving loop."""
+    if resolution < 0 or resolution >= r_ref:
+        return frame
+    h, w = frame.shape[:2]
+    frac = max(int(resolution), 1) / float(r_ref)
+    hh, ww = max(1, round(h * frac)), max(1, round(w * frac))
+    if (hh, ww) == (h, w):
+        return frame
+    small = jax.image.resize(jnp.asarray(frame), (hh, ww, *frame.shape[2:]), "linear")
+    big = jax.image.resize(small, frame.shape, "linear")
+    return np.asarray(big, frame.dtype)
+
+
 class VideoServer:
-    """Drives the FastVA policy over a frame stream with real model calls."""
+    """Drives the FastVA policy over a frame stream with real model calls.
+
+    The controller plans against its *belief* (the EWMA estimator); this
+    loop executes against the TRUE link (``trace``): upload times come from
+    the trace's bandwidth at the virtual send time, the uplink is serial
+    (this round's uploads queue behind the previous round's tail), and the
+    measured transfer time — never the plan's own estimate — is what gets
+    reported back to the estimator.  Offloaded frames are degraded to the
+    decision's resolution before edge inference, so resolution choices cost
+    real accuracy.  With ``edge_server`` set, edge inference coalesces into
+    one :class:`BatchedEndpoint` forward per model per round.
+    """
 
     def __init__(
         self,
         *,
         controller: OnlineController,
         npu_endpoints: dict[int, ModelEndpoint],  # model index -> NPU variant
-        edge_endpoints: dict[int, ModelEndpoint],  # model index -> edge variant
+        edge_endpoints: dict[int, ModelEndpoint] | None = None,  # -> edge variant
         stream: StreamSpec,
+        trace,  # core.simulator.Trace, or a constant NetworkState
+        edge_server: "EdgeBatchServer | None" = None,
     ):
         self.controller = controller
         self.npu = npu_endpoints
-        self.edge = edge_endpoints
+        self.edge = edge_endpoints or {}
+        self.edge_server = edge_server
+        if not self.edge and edge_server is None:
+            raise ValueError("VideoServer needs edge_endpoints or an edge_server")
         self.stream = stream
+        if isinstance(trace, NetworkState):
+            self._net_at = lambda t, net=trace: net
+        else:
+            self._net_at = trace.at
         self.results: list[FrameResult] = []
+        self.wall_s = 0.0
+        self._net_free_abs = 0.0  # serial true-link occupancy (virtual clock)
 
     def run(self, frames: np.ndarray, labels: np.ndarray) -> dict:
         gamma, T = self.stream.gamma, self.stream.deadline
         models = self.controller.models
+        r_max = self.stream.r_max
         n = len(frames)
         head = 0
+        wall0 = time.perf_counter()
         while head < n:
+            t0 = head * gamma
             plan = self.controller.next_plan(head)
             horizon = max(plan.horizon, 1)
+            deferred: list[tuple[int, str, float, bool]] = []
             for d in plan.decisions:
                 fi = head + d.frame
                 if fi >= n:
                     continue
                 if not d.is_processed():
                     continue
-                x = jnp.asarray(frames[fi][None])
                 prof: ModelProfile = models[d.model]
+                arrival_abs = t0 + d.frame * gamma
                 if d.where is Where.NPU:
-                    ep = self.npu[d.model]
-                    net_cost = 0.0
-                else:
-                    ep = self.edge[d.model]
-                    net = self.controller.estimator.state()
-                    nbytes = self.stream.frame_bytes(d.resolution)
-                    net_cost = net.upload_time(nbytes) + net.rtt
-                    self.controller.report_upload(nbytes, net.upload_time(nbytes))
-                logits = ep(x)
-                pred = int(np.argmax(logits[0]))
-                virtual_latency = net_cost + (
-                    prof.t_npu if d.where is Where.NPU else prof.t_server
-                )
-                # Planned finish is round-relative; audit against the deadline.
-                met = d.finish <= d.frame * gamma + T + 1e-9
-                self.results.append(
-                    FrameResult(
-                        frame=fi,
-                        where=d.where.value,
-                        model=prof.name,
-                        correct=pred == int(labels[fi]),
-                        latency_s=virtual_latency,
-                        deadline_met=met,
+                    logits = self.npu[d.model](jnp.asarray(frames[fi][None]))
+                    pred = int(np.argmax(logits[0]))
+                    # NPU frames never touch the network; planned times are
+                    # profile-measured, so the plan's window is the audit.
+                    met = d.finish <= d.frame * gamma + T + 1e-9
+                    self.results.append(
+                        FrameResult(
+                            frame=fi,
+                            where="npu",
+                            model=prof.name,
+                            correct=pred == int(labels[fi]),
+                            latency_s=prof.t_npu,
+                            deadline_met=met,
+                        )
                     )
-                )
+                    continue
+                # Edge path: measure the transfer on the true link.
+                true_net = self._net_at(arrival_abs)
+                nbytes = self.stream.frame_bytes(d.resolution)
+                t_up = true_net.upload_time(nbytes)
+                # The estimator observes the MEASURED upload time.  (The bug
+                # this replaces fed it net.upload_time() of its own belief —
+                # an echo that could never converge to the true link.)
+                self.controller.report_upload(nbytes, t_up)
+                self.controller.report_rtt(true_net.rtt)
+                if not np.isfinite(t_up):  # dead link: the frame never arrives
+                    # (and must not occupy the uplink forever — leave
+                    # _net_free_abs alone so a recovered trace can send)
+                    self.results.append(
+                        FrameResult(fi, "server", prof.name, False, float("inf"), False)
+                    )
+                    continue
+                start = max(self._net_free_abs, t0 + max(d.start, 0.0))
+                finish_abs = start + t_up + true_net.rtt + prof.t_server
+                self._net_free_abs = start + t_up
+                met = finish_abs <= arrival_abs + T + 1e-9
+                latency = max(finish_abs - arrival_abs, 0.0)
+                img = degrade_frame(frames[fi], d.resolution, r_ref=r_max)
+                if self.edge_server is not None:
+                    self.edge_server.submit(OffloadRequest(0, fi, d.model, img))
+                    deferred.append((fi, prof.name, latency, met))
+                else:
+                    logits = self.edge[d.model](jnp.asarray(img[None]))
+                    pred = int(np.argmax(logits[0]))
+                    self.results.append(
+                        FrameResult(fi, "server", prof.name, pred == int(labels[fi]), latency, met)
+                    )
+            if deferred:
+                out = self.edge_server.flush()
+                for fi, model_name, latency, met in deferred:
+                    pred = int(np.argmax(out[(0, fi)]))
+                    self.results.append(
+                        FrameResult(fi, "server", model_name, pred == int(labels[fi]), latency, met)
+                    )
             head += horizon
+        self.wall_s = time.perf_counter() - wall0
         return self.summary()
 
     def summary(self) -> dict:
@@ -302,12 +381,29 @@ class VideoServer:
         policy = spec.to_json() if spec is not None else None
         if not rs:
             return {"frames": 0, "policy_spec": policy}
-        return {
+        finite = [r.latency_s for r in rs if np.isfinite(r.latency_s)]
+        out = {
             "policy_spec": policy,
             "frames": len(rs),
             "accuracy": sum(r.correct for r in rs) / len(rs),
             "npu_frames": sum(r.where == "npu" for r in rs),
             "edge_frames": sum(r.where == "server" for r in rs),
             "deadline_met_frac": sum(r.deadline_met for r in rs) / len(rs),
-            "mean_latency_s": sum(r.latency_s for r in rs) / len(rs),
+            "mean_latency_s": sum(finite) / len(finite) if finite else 0.0,
+            "wall_s": self.wall_s,
+            "fps_sustained": len(rs) / self.wall_s if self.wall_s > 0 else 0.0,
+            "estimated_bps": self.controller.estimator.state().bandwidth_bps,
         }
+        if self.edge_server is not None:
+            bs = BatchStats()
+            for ep in self.edge_server.endpoints.values():
+                bs.flushes += ep.stats.flushes
+                bs.frames += ep.stats.frames
+                bs.padded += ep.stats.padded
+                bs.total_s += ep.stats.total_s
+            out["batch"] = {
+                "flushes": bs.flushes,
+                "mean_batch": bs.mean_batch,
+                "pad_fraction": bs.pad_fraction,
+            }
+        return out

@@ -175,6 +175,26 @@ def test_edge_batch_server_coalesces_and_routes(toy_endpoint):
             np.testing.assert_allclose(out[(cid, f)], expect, atol=1e-5)
 
 
+def test_batched_endpoint_counts_flush_per_forward(toy_endpoint):
+    """A batch larger than max_batch splits into chunks; each chunk is its
+    own jitted forward and must count as its own flush, or mean_batch /
+    pad_fraction overstate batching efficiency."""
+    frames = np.random.default_rng(3).standard_normal((20, 4, 4, 3)).astype(np.float32)
+    before_flushes = toy_endpoint.stats.flushes
+    before_frames = toy_endpoint.stats.frames
+    before_padded = toy_endpoint.stats.padded
+    out = toy_endpoint(frames)  # max_batch=8 -> chunks 8 + 8 + 4(pad 0)
+    assert out.shape[0] == 20
+    assert toy_endpoint.stats.flushes == before_flushes + 3
+    assert toy_endpoint.stats.frames == before_frames + 20
+    assert toy_endpoint.stats.padded == before_padded + 0
+    # Odd-sized tail still pads to its bucket — and still counts per forward.
+    before_flushes = toy_endpoint.stats.flushes
+    toy_endpoint(frames[:11])  # chunks 8 + 3(pad to 4)
+    assert toy_endpoint.stats.flushes == before_flushes + 2
+    assert toy_endpoint.stats.padded == before_padded + 1
+
+
 def test_edge_batch_server_rejects_unknown_model(toy_endpoint):
     from repro.serving import EdgeBatchServer, OffloadRequest
 

@@ -10,7 +10,7 @@ import pytest
 
 pytest.importorskip("hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
 import hypothesis.strategies as st  # noqa: E402
-from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.kernels.flash_attention import kernel as fk
 from repro.kernels.flash_attention import ref as fr
@@ -45,6 +45,64 @@ def test_int8_matmul_dtypes(dtype):
     np.testing.assert_allclose(
         np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=1e-4, atol=1e-3
     )
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        # Shapes where M, K, N are each NOT multiples of the default
+        # (128, 512, 128) blocks — exercises the adaptive block sizing +
+        # padding path in npu_matmul_prequant end to end.
+        (130, 700, 129),
+        (3, 33, 65),
+        (257, 513, 127),
+    ],
+)
+def test_int8_prequant_non_block_multiple_matches_ref(m, k, n):
+    rng = np.random.default_rng(m + k + n)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    xq, xs = nref.quantize_rowwise(x)
+    wq, ws = nref.quantize_colwise(w)
+    ref = nref.int8_matmul_ref(xq, wq, xs, ws)
+    out = nops.npu_matmul_prequant(xq, xs, wq, ws, interpret=True)
+    assert out.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-4)
+
+
+def test_int8_prequant_single_row_golden():
+    """M=1 — the serving loop's per-frame head GEMM.  The adaptive block
+    size (bm=1 instead of padding M to 128) must not change the numbers:
+    golden-compared against the pure-jnp int8 reference."""
+    rng = np.random.default_rng(42)
+    x = jnp.asarray(rng.normal(size=(1, 96)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(96, 10)), jnp.float32)
+    xq, xs = nref.quantize_rowwise(x)
+    wq, ws = nref.quantize_colwise(w)
+    ref = nref.int8_matmul_ref(xq, wq, xs, ws)
+    out = nops.npu_matmul_prequant(xq, xs, wq, ws, interpret=True)
+    assert out.shape == (1, 10)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6, atol=1e-6)
+
+
+def test_quant_error_stats_counts_mixed_tree():
+    """Non-float leaves (step counters, bool masks) must count as kept, so
+    leaves_quantized + leaves_kept == total leaves on any params tree."""
+    from repro.quant import fake_quant_tree, quant_error_stats
+
+    rng = np.random.default_rng(5)
+    params = {
+        "w": jnp.asarray(rng.normal(size=(16, 8)), jnp.float32),  # quantized
+        "b": jnp.asarray(rng.normal(size=(8,)), jnp.float32),  # kept (ndim < 2)
+        "step": jnp.asarray(3, jnp.int32),  # kept (int)
+        "mask": jnp.ones((4, 4), jnp.bool_),  # kept (bool)
+    }
+    q = fake_quant_tree(params)
+    stats = quant_error_stats(params, q)
+    total = len(jax.tree.leaves(params))
+    assert stats.leaves_quantized == 1
+    assert stats.leaves_kept == total - 1 == 3
+    assert stats.mean_rel_err > 0
 
 
 def test_int8_quant_error_bounded():
